@@ -1,0 +1,43 @@
+"""Shared benchmark helpers."""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+from repro.core.ev import EquitasEV, JaxprEV, SpesEV, UDPEV
+from repro.core.verifier import Veer, make_veer_plus
+
+DEFAULT_EVS = lambda: [EquitasEV(), SpesEV(), UDPEV(), JaxprEV()]
+PAPER_EVS = lambda: [EquitasEV()]  # the paper's experiments used Equitas
+
+
+def timed_verify(veer: Veer, P, Q, **kw):
+    t0 = time.perf_counter()
+    verdict, stats = veer.verify(P, Q, **kw)
+    return verdict, stats, time.perf_counter() - t0
+
+
+def spes_direct(P, Q):
+    """The 'Spes' row of Table 5: the whole version pair handed directly to
+    the EV (no windows) — fails whenever any unsupported op is present."""
+    from repro.core.ev.base import QueryPair
+    from repro.core.window import VersionPair
+    from repro.core.edits import identity_mapping
+
+    try:
+        pair = VersionPair(P, Q, identity_mapping(P, Q))
+        universe = frozenset(range(len(pair.units)))
+        qp = pair.to_query_pair(universe)
+    except Exception:
+        return None
+    if qp is None:
+        return None
+    ev = SpesEV()
+    if not ev.validate(qp):
+        return None
+    return ev.check(qp)
+
+
+def fmt_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

@@ -1,0 +1,74 @@
+"""Roofline table from the dry-run sweep results (assignment §ROOFLINE)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+
+def load(tag: str = "baseline", out_dir: str = "experiments/dryrun") -> List[Dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(out_dir, f"{tag}__*.json"))):
+        recs.append(json.load(open(f)))
+    return recs
+
+
+def table(tag: str = "baseline", mesh: str = "single", verbose: bool = True,
+          out_dir: str = "experiments/dryrun") -> List[Dict]:
+    rows = []
+    for r in load(tag, out_dir):
+        if r.get("mesh") != mesh:
+            continue
+        if r["status"] == "skipped":
+            rows.append(dict(arch=r["arch"], shape=r["shape"], status="skipped",
+                             reason=r.get("skip_reason", "")))
+            continue
+        if r["status"] != "ok":
+            rows.append(dict(arch=r["arch"], shape=r["shape"], status=r["status"]))
+            continue
+        rl = r["roofline"]
+        rows.append(
+            dict(
+                arch=r["arch"], shape=r["shape"], status="ok",
+                t_compute_s=rl["t_compute_s"],
+                t_memory_s=rl["t_memory_s"],
+                t_collective_s=rl["t_collective_s"],
+                bottleneck=rl["bottleneck"],
+                useful_ratio=rl["useful_flops_ratio"],
+                roofline_frac=rl["roofline_fraction"],
+                mem_GB=r["memory"]["per_device_total"] / 1e9,
+                fits=r["memory"]["fits_16G"],
+            )
+        )
+    if verbose:
+        hdr = f"{'arch':26s} {'shape':12s} {'t_comp':>8s} {'t_mem':>8s} {'t_coll':>8s} {'bound':>10s} {'useful':>7s} {'RLfrac':>7s} {'GB':>6s}"
+        print(hdr)
+        for row in rows:
+            if row["status"] != "ok":
+                print(f"{row['arch']:26s} {row['shape']:12s} [{row['status']}]")
+                continue
+            print(
+                f"{row['arch']:26s} {row['shape']:12s} {row['t_compute_s']:8.3f} "
+                f"{row['t_memory_s']:8.3f} {row['t_collective_s']:8.3f} "
+                f"{row['bottleneck']:>10s} {row['useful_ratio']:7.3f} "
+                f"{row['roofline_frac']:7.4f} {row['mem_GB']:6.1f}"
+            )
+    return rows
+
+
+def run(verbose: bool = True) -> List[Dict]:
+    import glob as _g
+
+    # prefer the final-code sweep when present (experiments/dryrun2),
+    # fall back to the original baseline sweep
+    if _g.glob("experiments/dryrun2/final__*.json"):
+        if verbose:
+            print("[tag=final, out=experiments/dryrun2 — final-code sweep]")
+        return table(tag="final", out_dir="experiments/dryrun2", verbose=verbose)
+    return table(verbose=verbose)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,92 @@
+"""Benchmark driver — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines (scaffold contract) after each
+section's human-readable output.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def _csv(name: str, seconds: float, derived: str) -> str:
+    return f"{name},{seconds * 1e6:.1f},{derived}"
+
+
+def main() -> None:
+    sys.path.insert(0, ".")
+    from benchmarks import (
+        figs_scaling,
+        roofline_bench,
+        table1_ev_support,
+        table5_comparison,
+        table6_optimizations,
+    )
+
+    csv_lines = []
+
+    print("== Table 1: direct EV support across workloads ==")
+    t0 = time.perf_counter()
+    rows = table1_ev_support.run()
+    complex_rows = [r for r in rows if r["workload"].startswith("W")]
+    pct = sum(r["pct_supported"] for r in complex_rows) / max(1, len(complex_rows))
+    csv_lines.append(_csv("table1_ev_support", time.perf_counter() - t0,
+                          f"complex_workloads_avg_supported={pct:.1f}%"))
+
+    print("\n== Table 5: Veer vs Veer+ vs direct Spes ==")
+    t0 = time.perf_counter()
+    rows = table5_comparison.run()
+    s = rows[-1]
+    csv_lines.append(_csv(
+        "table5_comparison", time.perf_counter() - t0,
+        f"eq% spes={s['spes_pct_eq']:.0f} veer={s['veer_pct_eq']:.0f} "
+        f"veer+={s['veer+_pct_eq']:.0f}; ineq% spes={s['spes_pct_ineq']:.0f} "
+        f"veer={s['veer_pct_ineq']:.0f} veer+={s['veer+_pct_ineq']:.0f}",
+    ))
+
+    print("\n== Table 6: optimization ablation (W3, 3 edits) ==")
+    t0 = time.perf_counter()
+    rows = table6_optimizations.run()
+    worst = max(rows, key=lambda r: r["decompositions"])
+    best = min((r for r in rows if r["verdict"] is True), key=lambda r: r["total_s"],
+               default=rows[0])
+    csv_lines.append(_csv(
+        "table6_optimizations", time.perf_counter() - t0,
+        f"baseline_decomps={worst['decompositions']} best_decomps={best['decompositions']} "
+        f"best_flags=S{int(best['S'])}P{int(best['P'])}R{int(best['R'])} "
+        f"best_total={best['total_s']}s",
+    ))
+
+    print("\n== Figures 24-28: scaling experiments ==")
+    t0 = time.perf_counter()
+    rows = figs_scaling.run()
+    f24 = [r for r in rows if r.get("fig") == "24"]
+    speedups = [
+        r["veer_decomps"] / max(1, r["veerplus_decomps"]) for r in f24
+    ]
+    csv_lines.append(_csv(
+        "figs24_28_scaling", time.perf_counter() - t0,
+        f"median_decomp_reduction={sorted(speedups)[len(speedups)//2]:.1f}x",
+    ))
+
+    print("\n== Roofline table (single-pod baseline) ==")
+    t0 = time.perf_counter()
+    rows = roofline_bench.run()
+    ok = [r for r in rows if r.get("status") == "ok"]
+    if ok:
+        worst = min(ok, key=lambda r: r["roofline_frac"])
+        csv_lines.append(_csv(
+            "roofline_baseline", time.perf_counter() - t0,
+            f"cells={len(ok)} worst={worst['arch']}/{worst['shape']}"
+            f"@{worst['roofline_frac']:.4f}",
+        ))
+
+    print("\n== CSV summary ==")
+    print("name,us_per_call,derived")
+    for line in csv_lines:
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Iterative-analytics session with Veer-driven result reuse (Use case 1).
+
+Simulates an analyst iterating on the token-ingestion pipeline: each
+iteration submits a new version to the ReuseManager, which verifies sinks
+against executed versions and serves provably-equivalent results from the
+content-addressed store instead of re-running ingestion.
+
+    PYTHONPATH=src python examples/iterative_analytics.py
+"""
+
+import sys, tempfile, time
+
+sys.path.insert(0, "src")
+
+from repro.core import dag as D
+from repro.core.dag import DataflowDAG, Link, Operator
+from repro.core.predicates import Pred
+from repro.core.verifier import make_veer_plus
+from repro.core.ev import EquitasEV, JaxprEV, SpesEV, UDPEV
+from repro.data import CORPUS_SCHEMA, corpus_table, ingestion_pipeline
+from repro.reuse import ReuseManager
+
+op = Operator.make
+
+
+def main():
+    store = tempfile.mkdtemp(prefix="veer_store_")
+    veer = make_veer_plus([EquitasEV(), SpesEV(), UDPEV(), JaxprEV()])
+    rm = ReuseManager(store, veer)
+    corpus = corpus_table(4096)  # ingestion is the expensive step
+
+    print("iteration 1: initial pipeline (quality>0.25, lang=0)")
+    t0 = time.perf_counter()
+    v1 = ingestion_pipeline(min_quality=0.25, lang=0)
+    r1 = rm.submit(v1, {"corpus": corpus})
+    print(f"  executed, {len(r1['packed'])} docs packed, {time.perf_counter()-t0:.2f}s")
+
+    print("iteration 2: reorder filters (cosmetic cleanup — equivalent)")
+    v2 = DataflowDAG(
+        [
+            op("corpus", D.SOURCE, schema=CORPUS_SCHEMA),
+            op("lang_filter", D.FILTER, pred=Pred.cmp("lang_id", "==", 0)),
+            op("q_filter", D.FILTER, pred=Pred.cmp("quality", ">", 0.25)),
+            op("tokenize", D.UDF, fn="tokenize_pack", out_schema=CORPUS_SCHEMA + ("tokens",)),
+            op("packed", D.SINK, semantics=D.BAG),
+        ],
+        [Link("corpus", "lang_filter"), Link("lang_filter", "q_filter"),
+         Link("q_filter", "tokenize"), Link("tokenize", "packed")],
+    )
+    t0 = time.perf_counter()
+    r2 = rm.submit(v2, {"corpus": corpus})
+    print(f"  served from store in {time.perf_counter()-t0:.2f}s "
+          f"(hits={rm.stats.sink_hits}, executions={rm.stats.executions})")
+
+    print("iteration 3: split the quality filter (still equivalent)")
+    v3 = v2.replace_op(op("q_filter", D.FILTER, pred=Pred.cmp("quality", ">", 0.5)))
+    v3 = v3.replace_op(
+        op("q_filter", D.FILTER,
+           pred=Pred.and_(Pred.cmp("quality", ">", 0.25), Pred.cmp("quality", ">", 0.1)))
+    )
+    t0 = time.perf_counter()
+    r3 = rm.submit(v3, {"corpus": corpus})
+    print(f"  served from store in {time.perf_counter()-t0:.2f}s "
+          f"(hits={rm.stats.sink_hits}, executions={rm.stats.executions})")
+
+    print("iteration 4: tighten quality threshold (NOT equivalent)")
+    v4 = ingestion_pipeline(min_quality=0.6, lang=0)
+    t0 = time.perf_counter()
+    r4 = rm.submit(v4, {"corpus": corpus})
+    print(f"  re-executed in {time.perf_counter()-t0:.2f}s "
+          f"({len(r4['packed'])} docs; hits={rm.stats.sink_hits}, "
+          f"executions={rm.stats.executions})")
+
+    s = rm.stats
+    print(
+        f"\nsession: {s.submissions} versions, {s.sink_hits} sinks reused, "
+        f"{s.executions} executions, verify={s.verify_time:.2f}s vs "
+        f"execute={s.execute_time:.2f}s, dedup'd writes={s.dedup_skipped_writes}"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""List the largest collectives (bytes × trip multiplier) in a saved HLO."""
+import gzip, re, sys
+sys.path.insert(0, "src")
+from repro.launch.roofline import _parse_op_line, _COMP_HDR, _shape_bytes
+
+path = sys.argv[1]
+text = gzip.open(path, "rt").read()
+comps, cur, entry = {}, None, None
+for line in text.splitlines():
+    hdr = _COMP_HDR.match(line)
+    if hdr:
+        cur = hdr.group(1); comps[cur] = []
+        if line.startswith("ENTRY"): entry = cur
+        continue
+    if cur is None: continue
+    p = _parse_op_line(line)
+    if p: comps[cur].append(p)
+symtab = {c: {n: s for n, s, _, _ in ops} for c, ops in comps.items()}
+wh = {}
+for c, ops in comps.items():
+    for n, s, k, rest in ops:
+        if k == "while":
+            bm = re.search(r"body=%?([\w\.\-]+)", rest)
+            tm = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', rest)
+            if bm: wh.setdefault(c, []).append((bm.group(1), int(tm.group(1)) if tm else 1))
+mult = {}
+def walk(c, m):
+    if mult.get(c, 0) >= m: return
+    mult[c] = m
+    for b, t in wh.get(c, []): walk(b, m * t)
+walk(entry, 1)
+rows = []
+for c, ops in comps.items():
+    m = mult.get(c)
+    if not m: continue
+    for n, s, k, rest in ops:
+        for ck in ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute"):
+            if k.startswith(ck):
+                opn = re.findall(r"%([\w\.\-]+)", rest.split(")")[0])
+                b = sum(_shape_bytes(symtab[c].get(o, "")) for o in opn) or _shape_bytes(s)
+                meta = re.search(r'op_name="([^"]*)"', rest)
+                rows.append((b * m, b, m, ck, (meta.group(1) if meta else "")[:110]))
+rows.sort(reverse=True)
+tot = sum(r[0] for r in rows)
+print(f"total collective bytes/chip: {tot/1e9:.1f} GB over {len(rows)} ops")
+for totb, b, m, kind, meta in rows[:14]:
+    print(f"  {totb/1e9:7.2f} GB  ({b/1e6:8.1f} MB x{m:4d}) {kind:20s} {meta}")

@@ -1,0 +1,29 @@
+"""Veer core: the paper's primary contribution, in composable pieces.
+
+DAG model + edits/mappings (§2), windows (§3), the verifier algorithms
+(§4-§5), optimizations (§7) and extensions (§8), with EVs as black boxes.
+"""
+from repro.core.dag import DataflowDAG, Link, Operator
+from repro.core.edits import (
+    AddLink,
+    AddOperator,
+    DeleteOperator,
+    EditMapping,
+    ModifyOperator,
+    RemoveLink,
+    apply_transformation,
+    diff,
+    identity_mapping,
+)
+from repro.core.predicates import LinCmp, LinExpr, Pred
+from repro.core.verifier import Veer, VeerStats, make_veer_plus
+from repro.core.window import VersionPair
+
+__all__ = [
+    "DataflowDAG", "Link", "Operator",
+    "AddLink", "AddOperator", "DeleteOperator", "EditMapping",
+    "ModifyOperator", "RemoveLink", "apply_transformation", "diff",
+    "identity_mapping",
+    "LinCmp", "LinExpr", "Pred",
+    "Veer", "VeerStats", "make_veer_plus", "VersionPair",
+]

@@ -1,0 +1,15 @@
+from repro.core.ev.base import BaseEV, EVCallCounter, QueryPair, Restriction
+from repro.core.ev.equitas import EquitasEV
+from repro.core.ev.spes import SpesEV, UDPEV
+from repro.core.ev.jaxpr_ev import JaxprEV
+
+__all__ = [
+    "BaseEV",
+    "EVCallCounter",
+    "QueryPair",
+    "Restriction",
+    "EquitasEV",
+    "SpesEV",
+    "UDPEV",
+    "JaxprEV",
+]

@@ -1,0 +1,108 @@
+"""EV protocol (paper §2.3, §4.2).
+
+An EV takes a pair of queries and returns True (equivalent), False
+(inequivalent) or None (Unknown).  Each EV publishes *restrictions* — a
+validator deciding whether a window/query pair is inside the fragment the EV
+can decide (Def 4.2/4.3) — plus two capability bits the verifier relies on:
+
+  * ``restriction_monotonic`` (Def 5.9): expanding an invalid window can
+    never make it valid.  Spes-like EVs have it; Equitas-like do not (R5/R6
+    counting restrictions), which changes how Algorithm 2 marks maximality.
+  * ``can_prove_inequivalence``: only such EVs may drive a False verdict
+    (paper §4.4 note about COSETTE).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
+
+from repro.core.dag import BAG, ORDERED, SET, DataflowDAG
+
+
+@dataclass(frozen=True)
+class QueryPair:
+    """Two stand-alone sub-DAGs with aligned symbolic sources and sinks.
+
+    Source operators carry the *same id* on both sides (the window boundary
+    correspondence), so "for every instance of source operators" (Def 3.4)
+    means binding equal tables to equal ids.
+    """
+
+    P: DataflowDAG
+    Q: DataflowDAG
+    sink_pairs: Tuple[Tuple[str, str], ...]
+    semantics: str = BAG
+    at_version_sink: bool = False  # window sinks are the versions' sinks
+
+    def key(self) -> Tuple:
+        return (
+            self.P.signature(),
+            self.Q.signature(),
+            self.sink_pairs,
+            self.semantics,
+            self.at_version_sink,
+        )
+
+
+@dataclass(frozen=True)
+class Restriction:
+    """One named EV restriction, e.g. Equitas R1..R6 (§4.2)."""
+
+    name: str
+    description: str
+
+
+class BaseEV:
+    name: str = "base"
+    semantics: FrozenSet[str] = frozenset({SET, BAG, ORDERED})
+    restriction_monotonic: bool = False
+    can_prove_inequivalence: bool = False
+    supported_op_types: FrozenSet[str] = frozenset()
+
+    def restrictions(self) -> List[Restriction]:
+        return []
+
+    def validate(self, qp: QueryPair) -> bool:
+        """True iff the pair satisfies this EV's restrictions (valid window,
+        Def 4.3)."""
+        raise NotImplementedError
+
+    def failed_restrictions(self, qp: QueryPair) -> List[str]:
+        """Names of violated restrictions (for Table-1-style reporting)."""
+        return [] if self.validate(qp) else ["unspecified"]
+
+    def check(self, qp: QueryPair) -> Optional[bool]:
+        """Equivalence verdict; callers must have validated first."""
+        raise NotImplementedError
+
+    def __repr__(self) -> str:
+        return f"EV({self.name})"
+
+
+class EVCallCounter:
+    """Wraps an EV to count/check calls — the experiments report EV-call
+    overhead separately (paper Table 6)."""
+
+    def __init__(self, ev: BaseEV):
+        self.ev = ev
+        self.calls = 0
+        self.validate_calls = 0
+        self.time_in_check = 0.0
+
+    def __getattr__(self, item):
+        return getattr(self.ev, item)
+
+    def validate(self, qp: QueryPair) -> bool:
+        self.validate_calls += 1
+        return self.ev.validate(qp)
+
+    def check(self, qp: QueryPair) -> Optional[bool]:
+        import time
+
+        self.calls += 1
+        t0 = time.perf_counter()
+        try:
+            return self.ev.check(qp)
+        finally:
+            self.time_in_check += time.perf_counter() - t0

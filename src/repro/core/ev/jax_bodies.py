@@ -1,0 +1,212 @@
+"""Traceable JAX semantics for dataflow operators (feeds JaxprEV).
+
+Tables are modeled as ``(cols: dict[str, f32[N]], mask: bool[N])`` — a fixed
+row capacity with a validity mask, so every operator is a shape-stable pure
+function and the whole window traces to a jaxpr.  Bodies are *faithful
+models* of the engine semantics: identical jaxprs ⇒ identical engine results
+(every semantics-bearing property is folded into the trace as a constant,
+e.g. the classifier "model" string becomes a salt constant).
+
+Not every engine op has a body (group-by aggregates, string predicates,
+joins) — JaxprEV's validator rejects windows containing those.
+"""
+
+from __future__ import annotations
+
+import zlib
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dag as D
+from repro.core.predicates import LinCmp, LinExpr, NonLinearAtom, Pred, StrEq
+
+JTable = Tuple[Dict[str, jnp.ndarray], jnp.ndarray]  # (cols, mask)
+
+JAX_UDF_REGISTRY: Dict[str, Callable[[JTable], JTable]] = {}
+JAX_NONLINEAR_FNS: Dict[str, Callable[..., jnp.ndarray]] = {}
+
+
+def register_jax_udf(name: str):
+    def deco(fn):
+        JAX_UDF_REGISTRY[name] = fn
+        return fn
+
+    return deco
+
+
+def register_jax_nonlinear(name: str):
+    def deco(fn):
+        JAX_NONLINEAR_FNS[name] = fn
+        JAX_NONLINEAR_FNS["not_" + name] = lambda *cols, _f=fn: ~_f(*cols)
+        return fn
+
+    return deco
+
+
+@register_jax_nonlinear("prod_pos")
+def _jprod_pos(a, b):
+    return (a * b) > 0
+
+
+@register_jax_udf("double_all")
+def _jdouble_all(t: JTable) -> JTable:
+    cols, mask = t
+    return {c: v * 2 for c, v in cols.items()}, mask
+
+
+@register_jax_udf("add_rowsum")
+def _jadd_rowsum(t: JTable) -> JTable:
+    cols, mask = t
+    s = jnp.zeros_like(next(iter(cols.values())))
+    for v in cols.values():
+        s = s + v
+    out = dict(cols)
+    out["rowsum"] = s
+    return out, mask
+
+
+def _eval_linexpr(e: LinExpr, cols: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    n = next(iter(cols.values())).shape[0]
+    out = jnp.full((n,), float(e.const), dtype=jnp.float32)
+    for c, v in e.coeffs:
+        out = out + float(v) * cols[c]
+    return out
+
+
+def _eval_pred(p: Pred, cols: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    n = next(iter(cols.values())).shape[0]
+    if p.kind == "true":
+        return jnp.ones((n,), dtype=bool)
+    if p.kind == "false":
+        return jnp.zeros((n,), dtype=bool)
+    if p.kind == "not":
+        return ~_eval_pred(p.children[0], cols)
+    if p.kind == "and":
+        m = jnp.ones((n,), dtype=bool)
+        for c in p.children:
+            m &= _eval_pred(c, cols)
+        return m
+    if p.kind == "or":
+        m = jnp.zeros((n,), dtype=bool)
+        for c in p.children:
+            m |= _eval_pred(c, cols)
+        return m
+    a = p.atom
+    if isinstance(a, LinCmp):
+        v = _eval_linexpr(a.expr, cols)
+        if a.op == "<=":
+            return v <= 0
+        if a.op == "<":
+            return v < 0
+        if a.op == "==":
+            return v == 0
+        return v != 0
+    if isinstance(a, NonLinearAtom):
+        return JAX_NONLINEAR_FNS[a.fn](*[cols[c] for c in a.cols])
+    raise TraceUnsupported(f"atom {a!r} not traceable")
+
+
+class TraceUnsupported(Exception):
+    pass
+
+
+# ops with JAX bodies — the JaxprEV fragment
+TRACEABLE_OPS = frozenset(
+    {
+        D.SOURCE,
+        D.FILTER,
+        D.PROJECT,
+        D.UNION,
+        D.REPLICATE,
+        D.SORT,
+        D.UDF,
+        D.CLASSIFIER,
+        D.SENTIMENT,
+        D.SINK,
+    }
+)
+
+
+def op_traceable(op: "D.Operator") -> bool:
+    t = op.op_type
+    if t not in TRACEABLE_OPS:
+        return False
+    if t == D.FILTER:
+        p: Pred = op.get("pred")
+        return _pred_traceable(p)
+    if t == D.PROJECT:
+        return all(not isinstance(e, str) or True for _, e in op.get("cols"))
+    if t == D.UDF:
+        return op.get("fn") in JAX_UDF_REGISTRY
+    return True
+
+
+def _pred_traceable(p: Pred) -> bool:
+    if p.kind == "atom":
+        if isinstance(p.atom, StrEq):
+            return False
+        if isinstance(p.atom, NonLinearAtom):
+            return p.atom.fn in JAX_NONLINEAR_FNS
+        return True
+    return all(_pred_traceable(c) for c in p.children)
+
+
+def execute_op_jax(op: "D.Operator", inputs: List[JTable]) -> JTable:
+    t = op.op_type
+    if t in (D.REPLICATE, D.SINK):
+        return inputs[0]
+
+    if t == D.FILTER:
+        cols, mask = inputs[0]
+        return cols, mask & _eval_pred(op.get("pred"), cols)
+
+    if t == D.PROJECT:
+        cols, mask = inputs[0]
+        out: Dict[str, jnp.ndarray] = {}
+        for name, expr in op.get("cols"):
+            if isinstance(expr, str):
+                out[name] = cols[expr]
+            else:
+                out[name] = _eval_linexpr(expr, cols)
+        return out, mask
+
+    if t == D.UNION:
+        (ca, ma), (cb, mb) = inputs
+        out = {c: jnp.concatenate([ca[c], cb[c]]) for c in ca}
+        return out, jnp.concatenate([ma, mb])
+
+    if t == D.SORT:
+        cols, mask = inputs[0]
+        keys = list(op.get("keys"))
+        # invalid rows to the end; then lexicographic by keys via composed
+        # stable argsorts (least-significant key first)
+        sort_cols = [jnp.where(mask, 0.0, 1.0)]
+        for col, asc in keys:
+            v = cols[col]
+            sort_cols.append(v if asc else -v)
+        n = mask.shape[0]
+        order = jnp.arange(n)
+        for k in reversed(sort_cols):
+            order = order[jnp.argsort(k[order], stable=True)]
+        return {c: v[order] for c, v in cols.items()}, mask[order]
+
+    if t in (D.CLASSIFIER, D.SENTIMENT):
+        cols, mask = inputs[0]
+        col, outn = op.get("col"), op.get("out")
+        model = op.get("model", "default")
+        k = int(op.get("classes", 3))
+        # salt the trace with the model identity so different models yield
+        # different jaxprs (soundness of jaxpr-equality verdicts)
+        salt = float(zlib.crc32(f"{t}:{model}".encode()) % 1000003)
+        h = jnp.abs(jnp.sin(cols[col] * 12.9898 + salt) * 43758.5453)
+        label = jnp.floor(h * k) % k
+        out = dict(cols)
+        out[outn] = label
+        return out, mask
+
+    if t == D.UDF:
+        return JAX_UDF_REGISTRY[op.get("fn")](inputs[0])
+
+    raise TraceUnsupported(t)

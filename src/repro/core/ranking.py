@@ -1,0 +1,28 @@
+"""Ranking functions for the best-first search (paper §7.3).
+
+Segments: F(S) = m_S + n_S (operators + changes); smaller explored first —
+quick answers and early termination.
+
+Decompositions: G(d) = o_d - w_d where o_d is the average number of units in
+the covering windows and w_d the number of unmerged (singleton) windows;
+larger explored first — closer to a maximal decomposition.
+"""
+
+from __future__ import annotations
+
+from typing import FrozenSet, Sequence, Tuple
+
+
+def segment_score(num_units: int, num_changes: int) -> int:
+    return num_units + num_changes
+
+
+def decomposition_score(
+    covering: Sequence[FrozenSet[int]], universe_size: int
+) -> float:
+    if not covering:
+        return 0.0
+    covered = sum(len(w) for w in covering)
+    o_d = covered / len(covering)
+    w_d = universe_size - covered  # unmerged singleton windows
+    return o_d - w_d

@@ -1,0 +1,542 @@
+"""Veer: the verification algorithms (paper §4, §5, §7, §8).
+
+``Veer`` is the baseline: Algorithm 1 (single edit) and Algorithm 2
+(decomposition search).  ``make_veer_plus`` enables the §7 optimizations —
+segmentation, pruning, ranking, fast inequivalence — mirroring the paper's
+Veer⁺, plus the §8 extensions (multiple EVs, relaxed expansion for
+non-monotonic EVs, greedy/backtracking verification).
+
+Soundness: True only via Lemma 5.3 (every covering window of a decomposition
+EV-verified equivalent) or Lemma 4.1; False only from (a) the §7.4 symbolic
+witness or (b) an inequivalence-capable EV on a window spanning the entire
+version pair (Theorem 5.8).
+"""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+import time
+from dataclasses import dataclass, field
+from typing import Dict, FrozenSet, List, Optional, Sequence, Set, Tuple
+
+from repro.core import dag as D
+from repro.core.dag import DataflowDAG
+from repro.core.edits import EditMapping, enumerate_mappings, identity_mapping
+from repro.core.ev.base import BaseEV, QueryPair
+from repro.core.ranking import decomposition_score, segment_score
+from repro.core.symbolic import quick_inequivalent
+from repro.core.window import Change, VersionPair
+
+TRUE, FALSE, UNKNOWN = True, False, None
+
+
+@dataclass
+class VeerStats:
+    decompositions_explored: int = 0
+    windows_formed: int = 0
+    windows_verified: int = 0
+    ev_calls: int = 0
+    ev_time: float = 0.0
+    explore_time: float = 0.0
+    total_time: float = 0.0
+    segments: int = 0
+    mappings_tried: int = 0
+    fast_inequivalence_hit: bool = False
+    budget_exhausted: bool = False
+    verdict: Optional[bool] = None
+
+    def as_dict(self) -> Dict[str, object]:
+        return dict(self.__dict__)
+
+
+class Veer:
+    """Baseline verifier (Algorithms 1-3). Optimization flags off by default."""
+
+    def __init__(
+        self,
+        evs: Sequence[BaseEV],
+        *,
+        segmentation: bool = False,
+        pruning: bool = False,
+        ranking: bool = False,
+        fast_inequivalence: bool = False,
+        relaxed_expansion: bool = False,
+        eager_verify: bool = False,
+        try_all_mappings: bool = False,
+        max_decompositions: int = 50_000,
+        max_windows: int = 200_000,
+        mapping_limit: int = 8,
+    ):
+        self.evs = list(evs)
+        self.segmentation = segmentation
+        self.pruning = pruning
+        self.ranking = ranking
+        self.fast_inequivalence = fast_inequivalence
+        self.relaxed_expansion = relaxed_expansion
+        self.eager_verify = eager_verify
+        self.try_all_mappings = try_all_mappings
+        self.max_decompositions = max_decompositions
+        self.max_windows = max_windows
+        self.mapping_limit = mapping_limit
+
+    # ------------------------------------------------------------------ public
+    def verify(
+        self,
+        P: DataflowDAG,
+        Q: DataflowDAG,
+        mapping: Optional[EditMapping] = None,
+        semantics: str = D.BAG,
+    ) -> Tuple[Optional[bool], VeerStats]:
+        t0 = time.perf_counter()
+        stats = VeerStats()
+        mappings = (
+            [mapping]
+            if mapping is not None
+            else (
+                enumerate_mappings(P, Q, self.mapping_limit)
+                if self.try_all_mappings
+                else [identity_mapping(P, Q)]
+            )
+        )
+        verdict: Optional[bool] = UNKNOWN
+        for m in mappings:
+            stats.mappings_tried += 1
+            try:
+                pair = VersionPair(P, Q, m, semantics)
+            except (D.DAGError, ValueError):
+                continue
+            verdict = self._verify_pair(pair, stats)
+            if verdict is not UNKNOWN:
+                break
+        stats.total_time = time.perf_counter() - t0
+        stats.verdict = verdict
+        return verdict, stats
+
+    # ------------------------------------------------------------ per mapping
+    def _verify_pair(self, pair: VersionPair, stats: VeerStats) -> Optional[bool]:
+        if not pair.changes:
+            return TRUE  # exact match (Alg 2 lines 1-2)
+
+        sink_pairs = self._version_sink_pairs(pair)
+
+        if self.fast_inequivalence and quick_inequivalent(
+            pair.P, pair.Q, sink_pairs, pair.semantics
+        ):
+            stats.fast_inequivalence_hit = True
+            return FALSE
+
+        ctx = _SearchContext(pair, self.evs, stats)
+
+        if self.segmentation:
+            segments = self._segment(pair, ctx)
+            if segments is None:  # a change sits on an unsupported operator
+                return UNKNOWN
+            stats.segments = max(stats.segments, len(segments))
+            order = sorted(
+                segments,
+                key=lambda s: segment_score(len(s[0]), len(s[1])),
+            )
+            whole = len(order) == 1 and len(order[0][0]) == len(pair.units)
+            for universe, changes in order:
+                r = self._algorithm2(ctx, frozenset(universe), changes)
+                if r is TRUE:
+                    continue  # Alg 3: next segment
+                if r is FALSE and whole:
+                    return FALSE
+                return UNKNOWN  # early termination (Alg 3 line 5)
+            return TRUE
+
+        universe = frozenset(range(len(pair.units)))
+        return self._algorithm2(ctx, universe, pair.changes)
+
+    def _version_sink_pairs(self, pair: VersionPair) -> List[Tuple[str, str]]:
+        fwd = pair.mapping.forward
+        out = []
+        for sp in pair.P.sinks:
+            sq = fwd.get(sp)
+            if sq is not None and sq in pair.Q.ops and not pair.Q.out_links[sq]:
+                out.append((sp, sq))
+        return out
+
+    # ------------------------------------------------------------ segmentation
+    def _segment(
+        self, pair: VersionPair, ctx: "_SearchContext"
+    ) -> Optional[List[Tuple[Set[int], List[Change]]]]:
+        """§7.1 method 2: boundaries at operators no EV supports."""
+        supported = set()
+        for ev in self.evs:
+            supported |= set(ev.supported_op_types)
+
+        def unit_supported(i: int) -> bool:
+            u = pair.units[i]
+            if u.p is not None and pair.P.ops[u.p].op_type not in supported:
+                return False
+            if u.q is not None and pair.Q.ops[u.q].op_type not in supported:
+                return False
+            return True
+
+        boundary = {i for i in range(len(pair.units)) if not unit_supported(i)}
+        for c in pair.changes:
+            if c.required_units & boundary:
+                return None  # the change itself is unverifiable — quick Unknown
+        # connected components of the unit graph minus boundary units
+        remaining = set(range(len(pair.units))) - boundary
+        comps: List[Set[int]] = []
+        seen: Set[int] = set()
+        for start in sorted(remaining):
+            if start in seen:
+                continue
+            comp = set()
+            stack = [start]
+            while stack:
+                n = stack.pop()
+                if n in comp:
+                    continue
+                comp.add(n)
+                stack.extend((pair.adj[n] & remaining) - comp)
+            seen |= comp
+            comps.append(comp)
+        segments = []
+        for comp in comps:
+            changes = [c for c in pair.changes if c.required_units <= comp]
+            if changes:
+                segments.append((comp, changes))
+        # sanity: every change assigned to exactly one segment
+        assigned = sum(len(cs) for _, cs in segments)
+        if assigned != len(pair.changes):
+            return None
+        return segments
+
+    # ------------------------------------------------------------- Algorithm 2
+    def _algorithm2(
+        self,
+        ctx: "_SearchContext",
+        universe: FrozenSet[int],
+        changes: List[Change],
+    ) -> Optional[bool]:
+        stats = ctx.stats
+        initial = tuple(sorted({c.required_units for c in changes}, key=sorted))
+        start = _decomp_key(initial)
+        explored: Set[Tuple] = {start}
+        entire_pair = universe if len(universe) == len(ctx.pair.units) else None
+
+        counter = itertools.count()
+        heap: List[Tuple[float, int, Tuple[FrozenSet[int], ...]]] = []
+
+        def push(windows: Tuple[FrozenSet[int], ...]):
+            score = (
+                -decomposition_score(windows, len(universe)) if self.ranking else 0.0
+            )
+            heapq.heappush(heap, (score, next(counter), windows))
+
+        push(initial)
+        t_explore = time.perf_counter()
+
+        while heap:
+            if stats.decompositions_explored >= self.max_decompositions:
+                stats.budget_exhausted = True
+                break
+            _, _, windows = heapq.heappop(heap)
+            stats.decompositions_explored += 1
+
+            # §7.2: decompositions containing a known-not-equivalent maximal
+            # window can never verify — skip their (EV-expensive) verification
+            # but keep EXPANDING them: other windows may merge the dead one
+            # away into a larger window that does verify.
+            doomed = self.pruning and any(w in ctx.dead for w in windows)
+
+            if self.eager_verify and not doomed:
+                r = self._try_verify_decomposition(ctx, windows, entire_pair)
+                if r is not UNKNOWN:
+                    stats.explore_time += time.perf_counter() - t_explore
+                    return r
+
+            unit_to_window = {}
+            for w in windows:
+                for u in w:
+                    unit_to_window[u] = w
+
+            all_marked = True
+            for w in windows:
+                neighbors = ctx.pair.neighbors(w) & universe
+                candidates: Set[FrozenSet[int]] = set()
+                for u in neighbors:
+                    target = unit_to_window.get(u)
+                    merged = w | (target if target is not None else frozenset([u]))
+                    candidates.add(merged)
+                expanded_any = False
+                for merged in candidates:
+                    if not self._accept_window(ctx, merged):
+                        continue
+                    new_windows = tuple(
+                        sorted(
+                            {x for x in windows if not (x <= merged)} | {merged},
+                            key=sorted,
+                        )
+                    )
+                    key = _decomp_key(new_windows)
+                    if key in explored:
+                        expanded_any = True  # an accepted move exists
+                        continue
+                    explored.add(key)
+                    push(new_windows)
+                    expanded_any = True
+                if not expanded_any:
+                    # window is maximal in this decomposition (Alg 2 line 14);
+                    # §7.2: verify immediately, remember refuted VALID windows
+                    if (
+                        self.pruning
+                        and w not in ctx.dead
+                        and ctx.valid_evs(w)
+                        and ctx.window_verdict(w) is not TRUE
+                    ):
+                        ctx.dead.add(w)
+                        doomed = True
+                else:
+                    all_marked = False
+
+            if all_marked and not doomed:
+                r = self._try_verify_decomposition(ctx, windows, entire_pair)
+                if r is not UNKNOWN:
+                    stats.explore_time += time.perf_counter() - t_explore
+                    return r
+            if all_marked and doomed and len(windows) == 1 and windows[0] == entire_pair:
+                # Alg 2 line 19: whole-pair window refuted by a capable EV
+                if ctx.window_verdict(windows[0]) is FALSE:
+                    stats.explore_time += time.perf_counter() - t_explore
+                    return FALSE
+
+        stats.explore_time += time.perf_counter() - t_explore
+        return UNKNOWN
+
+    def _accept_window(self, ctx: "_SearchContext", win: FrozenSet[int]) -> bool:
+        """Alg 2 line 9 policy. Ill-formed windows are always expandable
+        (their boundary is incoherent — no EV could ever see them); formed
+        windows must be valid for some EV, unless ``relaxed_expansion``
+        (§5.5(1): recovers completeness for non-monotonic EVs like Equitas,
+        at the cost of a larger search space — paper Example 1)."""
+        if not ctx.pair.connected(win):
+            return False
+        qp = ctx.query_pair(win)
+        if qp is None:
+            return True  # ill-formed: must keep growing
+        if ctx.valid_evs(win):
+            return True
+        return self.relaxed_expansion
+
+    def _try_verify_decomposition(
+        self,
+        ctx: "_SearchContext",
+        windows: Tuple[FrozenSet[int], ...],
+        entire_pair: Optional[FrozenSet[int]],
+    ) -> Optional[bool]:
+        verdicts = []
+        for w in windows:
+            v = ctx.window_verdict(w)
+            verdicts.append(v)
+            if v is not TRUE:
+                break
+        if verdicts and all(v is TRUE for v in verdicts) and len(verdicts) == len(windows):
+            return TRUE
+        if (
+            len(windows) == 1
+            and entire_pair is not None
+            and windows[0] == entire_pair
+            and verdicts
+            and verdicts[0] is FALSE
+        ):
+            return FALSE  # inequivalence-capable EV refuted the whole pair
+        return UNKNOWN
+
+    # ------------------------------------------------------------- Algorithm 1
+    def verify_single_edit(
+        self,
+        P: DataflowDAG,
+        Q: DataflowDAG,
+        mapping: Optional[EditMapping] = None,
+        semantics: str = D.BAG,
+    ) -> Tuple[Optional[bool], VeerStats]:
+        """Paper Algorithm 1 — kept explicit for fidelity; also used to
+        compute MCWs (maximal covering windows) for §7.1 method 1."""
+        t0 = time.perf_counter()
+        stats = VeerStats()
+        m = mapping or identity_mapping(P, Q)
+        pair = VersionPair(P, Q, m, semantics)
+        stats.mappings_tried = 1
+        if not pair.changes:
+            stats.total_time = time.perf_counter() - t0
+            stats.verdict = TRUE
+            return TRUE, stats
+        if len(pair.changes) != 1:
+            raise ValueError("Algorithm 1 requires a single change")
+        ctx = _SearchContext(pair, self.evs, stats)
+        verdict, _ = self._algorithm1(ctx, pair.changes[0])
+        stats.total_time = time.perf_counter() - t0
+        stats.verdict = verdict
+        return verdict, stats
+
+    def _algorithm1(
+        self, ctx: "_SearchContext", change: Change
+    ) -> Tuple[Optional[bool], List[FrozenSet[int]]]:
+        pair = ctx.pair
+        universe = frozenset(range(len(pair.units)))
+        start = change.required_units
+        explored: Set[FrozenSet[int]] = {start}
+        queue: List[FrozenSet[int]] = [start]
+        mcws: List[FrozenSet[int]] = []
+        verdict: Optional[bool] = UNKNOWN
+        while queue:
+            if ctx.stats.windows_formed >= self.max_windows:
+                ctx.stats.budget_exhausted = True
+                break
+            w = queue.pop(0)
+            ctx.stats.windows_formed += 1
+            expanded_any = False
+            for u in pair.neighbors(w) & universe:
+                w2 = w | {u}
+                if w2 in explored:
+                    expanded_any = True
+                    continue
+                if not self._accept_window(ctx, w2):
+                    continue
+                explored.add(w2)
+                queue.append(w2)
+                expanded_any = True
+            if not expanded_any:
+                mcws.append(w)
+                v = ctx.window_verdict(w)
+                if v is TRUE:
+                    return TRUE, mcws
+                if v is FALSE and w == universe:
+                    return FALSE, mcws
+        return verdict, mcws
+
+    def maximal_covering_windows(
+        self,
+        P: DataflowDAG,
+        Q: DataflowDAG,
+        mapping: Optional[EditMapping] = None,
+        semantics: str = D.BAG,
+    ) -> List[FrozenSet[int]]:
+        """All MCWs of a single change (used by segmentation method 1)."""
+        m = mapping or identity_mapping(P, Q)
+        pair = VersionPair(P, Q, m, semantics)
+        if len(pair.changes) != 1:
+            raise ValueError("single change required")
+        ctx = _SearchContext(pair, self.evs, VeerStats())
+        _, mcws = self._algorithm1(ctx, pair.changes[0])
+        return mcws
+
+
+class _SearchContext:
+    """Per-(pair, EV-set) caches: query pairs, validity, verdicts, dead set."""
+
+    def __init__(self, pair: VersionPair, evs: Sequence[BaseEV], stats: VeerStats):
+        self.pair = pair
+        self.evs = evs
+        self.stats = stats
+        self._valid: Dict[FrozenSet[int], Tuple[int, ...]] = {}
+        self._verdict: Dict[FrozenSet[int], Optional[bool]] = {}
+        self.dead: Set[FrozenSet[int]] = set()
+
+    def query_pair(self, win: FrozenSet[int]) -> Optional[QueryPair]:
+        return self.pair.to_query_pair(win)
+
+    def valid_evs(self, win: FrozenSet[int]) -> Tuple[int, ...]:
+        if win in self._valid:
+            return self._valid[win]
+        qp = self.query_pair(win)
+        out: Tuple[int, ...] = ()
+        if qp is not None:
+            out = tuple(
+                i
+                for i, ev in enumerate(self.evs)
+                if qp.semantics in ev.semantics and ev.validate(qp)
+            )
+        self._valid[win] = out
+        return out
+
+    def window_verdict(self, win: FrozenSet[int]) -> Optional[bool]:
+        """True if some valid EV proves equivalence; False if some valid
+        inequivalence-capable EV refutes; else Unknown. Identical sub-DAGs
+        shortcut to True (non-covering windows, Lemma 5.3 CASE1)."""
+        if win in self._verdict:
+            return self._verdict[win]
+        v: Optional[bool] = UNKNOWN
+        if self._identical(win):
+            v = TRUE
+        else:
+            qp = self.query_pair(win)
+            if qp is not None:
+                for i in self.valid_evs(win):
+                    ev = self.evs[i]
+                    self.stats.ev_calls += 1
+                    t0 = time.perf_counter()
+                    r = ev.check(qp)
+                    self.stats.ev_time += time.perf_counter() - t0
+                    if r is True:
+                        v = TRUE
+                        break
+                    if r is False and ev.can_prove_inequivalence:
+                        v = FALSE
+        self.stats.windows_verified += 1
+        self._verdict[win] = v
+        return v
+
+    def _identical(self, win: FrozenSet[int]) -> bool:
+        """Both sub-DAGs structurally identical under the mapping."""
+        pair = self.pair
+        fwd = pair.mapping.forward
+        p_ops = pair.p_ops(win)
+        q_ops = pair.q_ops(win)
+        if len(p_ops) != len(win) or len(q_ops) != len(win):
+            return False  # contains an inserted/deleted op
+        for p in p_ops:
+            q = fwd.get(p)
+            if q is None or q not in q_ops:
+                return False
+            if pair.P.ops[p].signature() != pair.Q.ops[q].signature():
+                return False
+        # every link feeding a window op must correspond INCLUDING its port —
+        # internal links and boundary in-links alike (a swapped Join/Union
+        # input wiring is not "identical" even when the op sets match)
+        p_links = {
+            (l.src, l.dst, l.dst_port)
+            for l in pair.P.links
+            if l.dst in p_ops
+        }
+        q_links = {
+            (l.src, l.dst, l.dst_port)
+            for l in pair.Q.links
+            if l.dst in q_ops
+        }
+        if any(s not in fwd for s, _, _ in p_links):
+            return False
+        mapped = {(fwd[s], fwd[d], pt) for s, d, pt in p_links}
+        return mapped == q_links
+
+
+def _decomp_key(windows: Tuple[FrozenSet[int], ...]) -> Tuple:
+    return tuple(tuple(sorted(w)) for w in windows)
+
+
+def make_veer_plus(evs: Sequence[BaseEV], **kw) -> Veer:
+    """Veer⁺: all §7 optimizations + §8 greedy window verification.
+
+    ``eager_verify`` is the §8 fix for incomplete EVs: a window already
+    verified equivalent must not be lost when the maximality-driven search
+    expands it into a window the EV cannot decide (Example 2 — triggered in
+    practice by the multi-EV setup, where JaxprEV validates Sort-containing
+    supersets it then cannot prove).  Verdicts are memoized per window, so
+    the overhead is one EV call per distinct valid window."""
+    defaults = dict(
+        segmentation=True,
+        pruning=True,
+        ranking=True,
+        fast_inequivalence=True,
+        eager_verify=True,
+        try_all_mappings=True,  # §5.5(2): identity mapping first, then swaps
+    )
+    defaults.update(kw)
+    return Veer(evs, **defaults)

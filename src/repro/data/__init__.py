@@ -1,0 +1,4 @@
+from repro.data.pipeline import ingestion_pipeline, pack_batches, CORPUS_SCHEMA
+from repro.data.synthetic import corpus_table
+
+__all__ = ["ingestion_pipeline", "pack_batches", "CORPUS_SCHEMA", "corpus_table"]

@@ -1,0 +1,13 @@
+from repro.distributed.sharding import (
+    constrain,
+    logical_to_physical,
+    mesh_context,
+    spec_tree_to_shardings,
+)
+
+__all__ = [
+    "constrain",
+    "logical_to_physical",
+    "mesh_context",
+    "spec_tree_to_shardings",
+]

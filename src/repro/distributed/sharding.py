@@ -1,0 +1,72 @@
+"""Logical→physical sharding translation + activation constraints.
+
+Model code speaks *logical* axes ("dp", "tp"); the launcher binds them to the
+physical mesh: dp → ("pod","data") on the multi-pod mesh or ("data",) on a
+single pod; tp → ("model",).  ``constrain`` is a no-op outside an active
+mesh context, so model code runs unmodified on a single CPU device (smoke
+tests) and fully sharded under the dry-run/launcher.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+LogicalAxis = Union[None, str, Tuple[str, ...]]
+
+_CTX: contextvars.ContextVar = contextvars.ContextVar("shard_ctx", default=None)
+
+
+def _translate_axis(ax: LogicalAxis, multi_pod: bool) -> Union[None, str, Tuple[str, ...]]:
+    if ax is None:
+        return None
+    if isinstance(ax, tuple):
+        out: Tuple[str, ...] = ()
+        for a in ax:
+            t = _translate_axis(a, multi_pod)
+            if t is None:
+                continue
+            out += t if isinstance(t, tuple) else (t,)
+        return out if out else None
+    if ax == "dp":
+        return ("pod", "data") if multi_pod else "data"
+    if ax == "tp":
+        return "model"
+    raise ValueError(f"unknown logical axis {ax!r}")
+
+
+def logical_to_physical(spec: Sequence[LogicalAxis], multi_pod: bool) -> P:
+    return P(*[_translate_axis(a, multi_pod) for a in spec])
+
+
+def spec_tree_to_shardings(spec_tree, mesh: Mesh, multi_pod: bool):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, logical_to_physical(s, multi_pod)),
+        spec_tree,
+        is_leaf=lambda s: isinstance(s, tuple)
+        and all(x is None or isinstance(x, (str, tuple)) for x in s),
+    )
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Mesh, multi_pod: bool):
+    token = _CTX.set((mesh, multi_pod))
+    try:
+        yield
+    finally:
+        _CTX.reset(token)
+
+
+def constrain(x: "jax.Array", spec: Sequence[LogicalAxis]) -> "jax.Array":
+    """with_sharding_constraint against the active mesh (no-op otherwise)."""
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    mesh, multi_pod = ctx
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, logical_to_physical(spec, multi_pod))
+    )

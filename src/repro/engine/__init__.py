@@ -1,0 +1,13 @@
+from repro.engine.table import Table, tables_equal
+from repro.engine.executor import execute, sink_results_equal
+from repro.engine.ops_impl import register_udf, register_nonlinear, UDF_REGISTRY
+
+__all__ = [
+    "Table",
+    "tables_equal",
+    "execute",
+    "sink_results_equal",
+    "register_udf",
+    "register_nonlinear",
+    "UDF_REGISTRY",
+]

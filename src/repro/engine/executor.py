@@ -1,0 +1,54 @@
+"""DAG executor: runs a workflow version on bound source tables (§2.2)."""
+
+from __future__ import annotations
+
+from typing import Dict, Mapping, Optional
+
+from repro.core import dag as D
+from repro.core.dag import DataflowDAG
+from repro.engine.ops_impl import execute_op
+from repro.engine.table import Table, tables_equal
+
+
+def execute(
+    dag: DataflowDAG, sources: Mapping[str, Table]
+) -> Dict[str, Table]:
+    """Execute and return {sink_id: result table}.
+
+    ``sources`` binds every Source operator id to an input table. Missing
+    bindings raise — determinism demands fully-specified inputs.
+    """
+    dag.validate()
+    results: Dict[str, Table] = {}
+    for op_id in dag.topo_order():
+        op = dag.ops[op_id]
+        if op.op_type == D.SOURCE:
+            if op_id not in sources:
+                raise KeyError(f"unbound source {op_id}")
+            results[op_id] = sources[op_id]
+            continue
+        ins = [results[l.src] for l in dag.in_links[op_id]]
+        results[op_id] = execute_op(op, ins)
+    return {s: results[s] for s in dag.sinks}
+
+
+def sink_results_equal(
+    P: DataflowDAG,
+    Q: DataflowDAG,
+    sources: Mapping[str, Table],
+    sink_map: Optional[Mapping[str, str]] = None,
+    semantics: str = D.BAG,
+) -> bool:
+    """Ground truth for one source instance: execute both versions, compare
+    corresponding sinks under the table semantics (Def 2.2)."""
+    rp = execute(P, sources)
+    rq = execute(Q, {k: v for k, v in sources.items() if k in Q.ops})
+    if sink_map is None:
+        if set(rp) != set(rq):
+            return False
+        sink_map = {s: s for s in rp}
+    for sp, sq in sink_map.items():
+        sem = P.ops[sp].get("semantics", semantics) if P.ops[sp].op_type == D.SINK else semantics
+        if not tables_equal(rp[sp], rq[sq], sem):
+            return False
+    return True

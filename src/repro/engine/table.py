@@ -1,0 +1,133 @@
+"""Columnar tables + result-equality semantics (paper Def 2.2).
+
+Results are compared under the application's table semantics: Set, Bag, or
+Ordered Bag.  The engine is the executable ground truth the property tests
+check Veer's verdicts against.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.dag import BAG, ORDERED, SET
+
+
+class Table:
+    """Ordered named columns of equal-length 1-D numpy arrays."""
+
+    def __init__(self, columns: Mapping[str, np.ndarray], order: Optional[Sequence[str]] = None):
+        self.order: List[str] = list(order) if order is not None else list(columns)
+        self.cols: Dict[str, np.ndarray] = {}
+        n = None
+        for name in self.order:
+            arr = np.asarray(columns[name])
+            if arr.ndim != 1:
+                arr = arr.reshape(-1)
+            if n is None:
+                n = len(arr)
+            elif len(arr) != n:
+                raise ValueError(f"column {name}: length {len(arr)} != {n}")
+            self.cols[name] = arr
+        self.n = n or 0
+
+    # -- constructors ---------------------------------------------------------
+    @staticmethod
+    def from_rows(schema: Sequence[str], rows: Iterable[Sequence]) -> "Table":
+        rows = list(rows)
+        cols = {}
+        for j, name in enumerate(schema):
+            vals = [r[j] for r in rows]
+            cols[name] = _np_col(vals)
+        return Table(cols, schema)
+
+    @staticmethod
+    def empty(schema: Sequence[str]) -> "Table":
+        return Table({c: np.array([]) for c in schema}, schema)
+
+    # -- access ----------------------------------------------------------------
+    def __len__(self) -> int:
+        return self.n
+
+    def col(self, name: str) -> np.ndarray:
+        return self.cols[name]
+
+    def row(self, i: int) -> Tuple:
+        return tuple(_scalar(self.cols[c][i]) for c in self.order)
+
+    def rows(self) -> List[Tuple]:
+        return [self.row(i) for i in range(self.n)]
+
+    def take(self, idx: np.ndarray) -> "Table":
+        return Table({c: self.cols[c][idx] for c in self.order}, self.order)
+
+    def mask(self, m: np.ndarray) -> "Table":
+        return self.take(np.nonzero(m)[0])
+
+    def with_col(self, name: str, arr: np.ndarray) -> "Table":
+        cols = dict(self.cols)
+        cols[name] = np.asarray(arr)
+        order = self.order + ([name] if name not in self.cols else [])
+        return Table(cols, order)
+
+    def select(self, names: Sequence[str]) -> "Table":
+        return Table({n: self.cols[n] for n in names}, list(names))
+
+    def rename(self, ren: Mapping[str, str]) -> "Table":
+        return Table(
+            {ren.get(c, c): self.cols[c] for c in self.order},
+            [ren.get(c, c) for c in self.order],
+        )
+
+    def concat(self, other: "Table") -> "Table":
+        if other.order != self.order:
+            other = other.select(self.order)
+        return Table(
+            {c: np.concatenate([self.cols[c], other.cols[c]]) for c in self.order},
+            self.order,
+        )
+
+    def __repr__(self) -> str:
+        return f"Table({self.order}, n={self.n})"
+
+
+def _np_col(vals: List) -> np.ndarray:
+    if any(isinstance(v, str) for v in vals):
+        return np.array(vals, dtype=object)
+    if any(isinstance(v, (list, tuple)) for v in vals):
+        return np.array(vals, dtype=object)
+    return np.array(vals, dtype=np.float64) if vals else np.array([])
+
+
+def _scalar(v):
+    if isinstance(v, (np.floating,)):
+        f = float(v)
+        # canonicalize -0.0 and near-int floats for row hashing
+        r = round(f, 9)
+        return r + 0.0
+    if isinstance(v, (np.integer,)):
+        return int(v)
+    if isinstance(v, np.ndarray):
+        return tuple(v.tolist())
+    if isinstance(v, (list, tuple)):
+        return tuple(v)
+    return v
+
+
+def _canonical_rows(t: Table) -> List[Tuple]:
+    return t.rows()
+
+
+def tables_equal(a: Table, b: Table, semantics: str) -> bool:
+    """Def 2.2 result equality under the given table semantics."""
+    if a.order != b.order:
+        return False
+    ra, rb = _canonical_rows(a), _canonical_rows(b)
+    if semantics == ORDERED:
+        return ra == rb
+    if semantics == BAG:
+        return sorted(map(repr, ra)) == sorted(map(repr, rb))
+    if semantics == SET:
+        return {repr(r) for r in ra} == {repr(r) for r in rb}
+    raise ValueError(f"unknown semantics {semantics}")

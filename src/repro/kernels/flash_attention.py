@@ -1,0 +1,169 @@
+"""Pallas TPU flash attention (forward) — GQA, causal/sliding/chunked.
+
+TPU-native design (HARDWARE ADAPTATION notes):
+  * grid = (B, H, nQ, nK) with the KV axis innermost: TPU grids execute
+    sequentially on a core, so fp32 VMEM scratch (acc, m, l) carries the
+    online-softmax state across KV steps — the TPU analogue of a CUDA
+    thread-block loop with shared-memory accumulators (no warp shuffles).
+  * BlockSpecs tile Q/K/V into (q_block, D)/(kv_block, D) VMEM tiles with
+    MXU-aligned 128-multiples; GQA is folded into the K/V index_map
+    (kv head = q head // group), so no KV duplication in HBM or VMEM.
+  * causal / sliding-window / chunked-local masks are built from iota over
+    block-local positions; fully-masked KV blocks are SKIPPED via
+    ``@pl.when`` (grid still visits them, but no MXU work is issued —
+    this is where the kernel beats the XLA lowering, which cannot skip).
+
+The backward pass uses the blocked jnp flash VJP (ref.py), which the SPMD
+partitioner handles well; a Pallas backward is a recorded follow-up.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    acc_ref,
+    m_ref,
+    l_ref,
+    *,
+    scale: float,
+    causal: bool,
+    window: Optional[int],
+    chunk: Optional[int],
+    q_block: int,
+    kv_block: int,
+    n_kv: int,
+    seq_len: int,
+    q_offset: int,
+):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = qi * q_block + q_offset
+    k_start = ki * kv_block
+
+    # block-level skip: is any (q, k) pair in this tile unmasked?
+    needed = jnp.bool_(True)
+    if causal:
+        needed &= k_start <= q_start + q_block - 1
+    if window is not None:
+        needed &= k_start + kv_block - 1 > q_start - window
+    if chunk is not None:
+        needed &= (k_start // chunk) <= ((q_start + q_block - 1) // chunk)
+        needed &= (k_start + kv_block - 1) // chunk >= (q_start // chunk)
+    needed &= k_start < seq_len
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)      # (q_block, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)      # (kv_block, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale                                       # (q_block, kv_block)
+
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (q_block, kv_block), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (q_block, kv_block), 1)
+        mask = kpos < seq_len
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        if chunk is not None:
+            mask &= (kpos // chunk) == (qpos // chunk)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        l_prev = l_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_prev * corr + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, :, 0, :] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jnp.ndarray,  # (B, S, H, D)
+    k: jnp.ndarray,  # (B, T, KV, D)
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    chunk: Optional[int] = None,
+    q_offset: int = 0,
+    q_block: int = 128,
+    kv_block: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, S, H, D = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    q_block = min(q_block, S)
+    kv_block = min(kv_block, T)
+    nq = (S + q_block - 1) // q_block
+    nk = (T + kv_block - 1) // kv_block
+    pad_q = nq * q_block - S
+    pad_k = nk * kv_block - T
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+
+    kernel = functools.partial(
+        _fa_kernel,
+        scale=1.0 / (D ** 0.5),
+        causal=causal,
+        window=window,
+        chunk=chunk,
+        q_block=q_block,
+        kv_block=kv_block,
+        n_kv=nk,
+        seq_len=T,
+        q_offset=q_offset,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, q_block, 1, D), lambda b, h, qi, ki: (b, qi, h, 0)),
+            pl.BlockSpec((1, kv_block, 1, D), lambda b, h, qi, ki: (b, ki, h // G, 0)),
+            pl.BlockSpec((1, kv_block, 1, D), lambda b, h, qi, ki: (b, ki, h // G, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q_block, 1, D), lambda b, h, qi, ki: (b, qi, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, nq * q_block, H, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_block, D), jnp.float32),
+            pltpu.VMEM((q_block,), jnp.float32),
+            pltpu.VMEM((q_block,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :S]

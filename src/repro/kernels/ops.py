@@ -1,0 +1,103 @@
+"""Jit'd public wrappers for the compute hot-spots.
+
+Dispatch policy (``impl``):
+  * "auto"      — Pallas kernel on TPU backends, reference elsewhere.
+  * "pallas"    — force the Pallas kernel (TPU lowering).
+  * "interpret" — Pallas kernel body executed in interpret mode (CPU tests).
+  * "reference" — pure-jnp flash-style reference (the dry-run path).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+
+def _default_impl() -> str:
+    try:
+        plat = jax.default_backend()
+    except Exception:  # pragma: no cover
+        plat = "cpu"
+    return "pallas" if plat == "tpu" else "reference"
+
+
+def flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    chunk: Optional[int] = None,
+    q_offset: int = 0,
+    impl: str = "auto",
+    q_block: int = 512,
+    kv_block: int = 512,
+) -> jnp.ndarray:
+    if impl == "auto":
+        impl = _default_impl()
+    if impl in ("pallas", "interpret"):
+        from repro.kernels.flash_attention import flash_attention_pallas
+
+        return flash_attention_pallas(
+            q,
+            k,
+            v,
+            causal=causal,
+            window=window,
+            chunk=chunk,
+            q_offset=q_offset,
+            interpret=(impl == "interpret"),
+        )
+    return ref.flash_attention_jnp(
+        q,
+        k,
+        v,
+        causal=causal,
+        window=window,
+        chunk=chunk,
+        q_block=q_block,
+        kv_block=kv_block,
+        q_offset=q_offset,
+    )
+
+
+def ssd(
+    x: jnp.ndarray,
+    dt: jnp.ndarray,
+    A: jnp.ndarray,
+    Bm: jnp.ndarray,
+    Cm: jnp.ndarray,
+    *,
+    chunk: int = 256,
+    initial_state: Optional[jnp.ndarray] = None,
+    impl: str = "auto",
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    if impl == "auto":
+        impl = _default_impl()
+    if impl in ("pallas", "interpret"):
+        from repro.kernels.ssd_scan import ssd_pallas
+
+        return ssd_pallas(
+            x, dt, A, Bm, Cm, chunk=chunk,
+            initial_state=initial_state,
+            interpret=(impl == "interpret"),
+        )
+    return ref.ssd_reference(x, dt, A, Bm, Cm, chunk=chunk, initial_state=initial_state)
+
+
+def rmsnorm(
+    x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-5, *, impl: str = "auto"
+) -> jnp.ndarray:
+    if impl == "auto":
+        impl = _default_impl()
+    if impl in ("pallas", "interpret"):
+        from repro.kernels.rmsnorm import rmsnorm_pallas
+
+        return rmsnorm_pallas(x, w, eps, interpret=(impl == "interpret"))
+    return ref.rmsnorm_reference(x, w, eps)

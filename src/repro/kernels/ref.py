@@ -1,0 +1,425 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are also the default compute path on non-TPU backends (and for the
+multi-pod dry-run, where the roofline is derived from their HLO).  They are
+written flash-style — blocked online-softmax attention, chunked SSD — so the
+*memory* roofline matches what the Pallas kernels claim on TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, causal / sliding-window / chunked-local), flash-style
+# ---------------------------------------------------------------------------
+
+
+def attention_reference(
+    q: jnp.ndarray,  # (B, S, H, D)
+    k: jnp.ndarray,  # (B, T, KV, D)
+    v: jnp.ndarray,  # (B, T, KV, D)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,   # sliding window (attend to last `window`)
+    chunk: Optional[int] = None,    # chunked-local (attend within chunk)
+    q_offset: int = 0,              # absolute position of q[0] (decode/prefill)
+) -> jnp.ndarray:
+    """Naive O(S·T) attention — the oracle for tests. fp32 softmax."""
+    B, S, H, D = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, D)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg.astype(jnp.float32), k.astype(jnp.float32))
+    scores = scores / jnp.sqrt(jnp.asarray(D, jnp.float32))
+    qpos = jnp.arange(S) + q_offset
+    kpos = jnp.arange(T)
+    mask = jnp.ones((S, T), dtype=bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    if chunk is not None:
+        mask &= (kpos[None, :] // chunk) == (qpos[:, None] // chunk)
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, S, H, D).astype(q.dtype)
+
+
+def _block_bias(qpos, kpos, T, causal, window, chunk):
+    """Additive mask bias for a (q_block, kv_block) tile, built from the
+    position vectors (never materialized across blocks)."""
+    bias = jnp.zeros((qpos.shape[0], kpos.shape[0]), jnp.float32)
+    if causal:
+        bias = jnp.where(kpos[None, :] <= qpos[:, None], bias, NEG_INF)
+    if window is not None:
+        bias = jnp.where(kpos[None, :] > qpos[:, None] - window, bias, NEG_INF)
+    if chunk is not None:
+        bias = jnp.where(
+            (kpos[None, :] // chunk) == (qpos[:, None] // chunk), bias, NEG_INF
+        )
+    return jnp.where((kpos < T)[None, :], bias, NEG_INF)
+
+
+def flash_attention_jnp(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    chunk: Optional[int] = None,
+    q_block: int = 512,
+    kv_block: int = 512,
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    """Blocked online-softmax attention with a flash-style custom VJP.
+
+    Forward saves only (q, k, v, out, lse); the backward recomputes block
+    probabilities — O(S·block) live memory in both passes, matching the
+    Pallas kernel's VMEM story.  Without the custom VJP, autodiff of the KV
+    scan stacks per-block probabilities (observed 8.6 GB/layer/device on the
+    dry-run — EXPERIMENTS.md §Perf iteration 1)."""
+    return _flash(q, k, v, causal, window, chunk, q_block, kv_block, q_offset)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def _flash(q, k, v, causal, window, chunk, q_block, kv_block, q_offset):
+    out, _ = _flash_fwd_impl(
+        q, k, v, causal, window, chunk, q_block, kv_block, q_offset
+    )
+    return out
+
+
+def _flash_fwd_rule(q, k, v, causal, window, chunk, q_block, kv_block, q_offset):
+    out, lse = _flash_fwd_impl(
+        q, k, v, causal, window, chunk, q_block, kv_block, q_offset
+    )
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd_rule(causal, window, chunk, q_block, kv_block, q_offset, res, g):
+    q, k, v, out, lse = res
+    dq, dk, dv = _flash_bwd_impl(
+        q, k, v, out, lse, g, causal, window, chunk, q_block, kv_block, q_offset
+    )
+    return dq, dk, dv
+
+
+_flash.defvjp(_flash_fwd_rule, _flash_bwd_rule)
+
+
+def _flash_fwd_impl(q, k, v, causal, window, chunk, q_block, kv_block, q_offset):
+    B, S, H, D = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    q_block = min(q_block, S)
+    kv_block = min(kv_block, T)
+    nq = (S + q_block - 1) // q_block
+    nk = (T + kv_block - 1) // kv_block
+    pad_q = nq * q_block - S
+    pad_k = nk * kv_block - T
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+
+    qb = q.reshape(B, nq, q_block, KV, G, D).astype(jnp.float32)
+    kb = k.reshape(B, nk, kv_block, KV, D).astype(jnp.float32)
+    vb = v.reshape(B, nk, kv_block, KV, D).astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(D, jnp.float32))
+
+    def per_q_block(qi, q_tile):
+        # q_tile: (B, q_block, KV, G, D).  NOTE: block indices are
+        # loop-CARRIED counters, not scan xs — if kpos/qpos came from
+        # iota xs, XLA hoists every block's mask into one giant stacked
+        # pred buffer (observed: 2.1 GB/layer on the 512-dev dry-run).
+        qpos = qi * q_block + jnp.arange(q_block) + q_offset
+
+        def kv_step(carry, inp):
+            acc, m, l, ki = carry
+            k_tile, v_tile = inp
+            kpos = ki * kv_block + jnp.arange(kv_block)
+            s = jnp.einsum("bqkgd,btkd->bkgqt", q_tile, k_tile) * scale
+            bias = _block_bias(qpos, kpos, T, causal, window, chunk)
+            s = s + bias[None, None, None]
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqt,btkd->bkgqd", p, v_tile
+            )
+            return (acc_new, m_new, l_new, ki + 1), None
+
+        acc0 = jnp.zeros((B, KV, G, q_block, D), jnp.float32)
+        m0 = jnp.full((B, KV, G, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, q_block), jnp.float32)
+        (acc, m, l, _), _ = jax.lax.scan(
+            kv_step,
+            (acc0, m0, l0, jnp.zeros((), jnp.int32)),
+            (kb.swapaxes(0, 1), vb.swapaxes(0, 1)),
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))
+        # (B, KV, G, q_block, D) -> (B, q_block, KV, G, D)
+        return out.transpose(0, 3, 1, 2, 4), lse.transpose(0, 3, 1, 2)
+
+    def map_body(carry, q_tile):
+        qi = carry
+        o, lse = per_q_block(qi, q_tile)
+        return qi + 1, (o, lse)
+
+    _, (outs, lses) = jax.lax.scan(
+        map_body, jnp.zeros((), jnp.int32), qb.swapaxes(0, 1)
+    )  # (nq, B, q_block, KV, G, D) / (nq, B, q_block, KV, G)
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, nq * q_block, H, D)
+    lse = lses.transpose(1, 0, 2, 3, 4).reshape(B, nq * q_block, H)
+    return out[:, :S].astype(q.dtype), lse[:, :S]
+
+
+def _flash_bwd_impl(
+    q, k, v, out, lse, g, causal, window, chunk, q_block, kv_block, q_offset
+):
+    """Flash backward: recompute block probabilities from saved lse.
+
+    dV = Σ_q pᵀ g;  dP = g Vᵀ;  dS = p ∘ (dP − δ) with δ = Σ_d g·out;
+    dQ = dS K;  dK = dSᵀ Q.  Scans q-blocks (carrying dK/dV accumulators)
+    inside a scan over kv-blocks — O(blocks) live memory.
+    """
+    B, S, H, D = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    q_block = min(q_block, S)
+    kv_block = min(kv_block, T)
+    nq = (S + q_block - 1) // q_block
+    nk = (T + kv_block - 1) // kv_block
+    pad_q = nq * q_block - S
+    pad_k = nk * kv_block - T
+    f32 = jnp.float32
+
+    def padq(x):
+        return jnp.pad(x, ((0, 0), (0, pad_q)) + ((0, 0),) * (x.ndim - 2)) if pad_q else x
+
+    def padk(x):
+        return jnp.pad(x, ((0, 0), (0, pad_k)) + ((0, 0),) * (x.ndim - 2)) if pad_k else x
+
+    qb = padq(q).reshape(B, nq, q_block, KV, G, D).astype(f32)
+    ob = padq(out).reshape(B, nq, q_block, KV, G, D).astype(f32)
+    gb = padq(g).reshape(B, nq, q_block, KV, G, D).astype(f32)
+    lseb = padq(lse).reshape(B, nq, q_block, KV, G)
+    kb = padk(k).reshape(B, nk, kv_block, KV, D).astype(f32)
+    vb = padk(v).reshape(B, nk, kv_block, KV, D).astype(f32)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(D, f32))
+    delta = jnp.sum(ob * gb, axis=-1)  # (B, nq, q_block, KV, G)
+
+    def kv_step(ki, k_tile, v_tile):
+        kpos = ki * kv_block + jnp.arange(kv_block)
+
+        def q_step(carry, inp):
+            dk_acc, dv_acc, qi = carry
+            q_tile, g_tile, l_tile, d_tile = inp
+            qpos = qi * q_block + jnp.arange(q_block) + q_offset
+            s = jnp.einsum("bqkgd,btkd->bkgqt", q_tile, k_tile) * scale
+            bias = _block_bias(qpos, kpos, T, causal, window, chunk)
+            p = jnp.exp(s + bias[None, None, None] - l_tile.transpose(0, 2, 3, 1)[..., None])
+            dv_acc = dv_acc + jnp.einsum("bkgqt,bqkgd->btkd", p, g_tile)
+            dp = jnp.einsum("bqkgd,btkd->bkgqt", g_tile, v_tile)
+            ds = p * (dp - d_tile.transpose(0, 2, 3, 1)[..., None]) * scale
+            dq_blk = jnp.einsum("bkgqt,btkd->bqkgd", ds, k_tile)
+            dk_acc = dk_acc + jnp.einsum("bkgqt,bqkgd->btkd", ds, q_tile)
+            return (dk_acc, dv_acc, qi + 1), dq_blk
+
+        dk0 = jnp.zeros((B, kv_block, KV, D), f32)
+        dv0 = jnp.zeros((B, kv_block, KV, D), f32)
+        (dk_t, dv_t, _), dq_blocks = jax.lax.scan(
+            q_step,
+            (dk0, dv0, jnp.zeros((), jnp.int32)),
+            (
+                qb.swapaxes(0, 1),
+                gb.swapaxes(0, 1),
+                lseb.swapaxes(0, 1),
+                delta.swapaxes(0, 1),
+            ),
+        )
+        return dk_t, dv_t, dq_blocks.swapaxes(0, 1)  # (B, nq, qb, KV, G, D)
+
+    def kv_loop(carry, inp):
+        dq_acc, ki = carry
+        k_tile, v_tile = inp
+        dk_t, dv_t, dq_contrib = kv_step(ki, k_tile, v_tile)
+        return (dq_acc + dq_contrib, ki + 1), (dk_t, dv_t)
+
+    dq0 = jnp.zeros((B, nq, q_block, KV, G, D), f32)
+    (dq_acc, _), (dk_all, dv_all) = jax.lax.scan(
+        kv_loop,
+        (dq0, jnp.zeros((), jnp.int32)),
+        (kb.swapaxes(0, 1), vb.swapaxes(0, 1)),
+    )
+    dq = dq_acc.reshape(B, nq * q_block, H, D)[:, :S].astype(q.dtype)
+    dk = dk_all.transpose(1, 0, 2, 3, 4).reshape(B, nk * kv_block, KV, D)[:, :T].astype(k.dtype)
+    dv = dv_all.transpose(1, 0, 2, 3, 4).reshape(B, nk * kv_block, KV, D)[:, :T].astype(v.dtype)
+    return dq, dk, dv
+
+
+def decode_attention_reference(
+    q: jnp.ndarray,        # (B, H, D) single new token
+    k_cache: jnp.ndarray,  # (B, T, KV, D)
+    v_cache: jnp.ndarray,  # (B, T, KV, D)
+    pos: jnp.ndarray,      # scalar int32: index of the new token
+    *,
+    window: Optional[int] = None,
+    chunk: Optional[int] = None,
+) -> jnp.ndarray:
+    B, H, D = q.shape
+    T, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    # no fp32 materialization of the cache: bf16 reads, fp32 accumulation
+    qg = q.reshape(B, KV, G, D).astype(k_cache.dtype)
+    scores = jnp.einsum(
+        "bkgd,btkd->bkgt", qg, k_cache, preferred_element_type=jnp.float32
+    )
+    scores = scores / jnp.sqrt(jnp.asarray(D, jnp.float32))
+    kpos = jnp.arange(T)
+    mask = kpos <= pos
+    if window is not None:
+        mask &= kpos > pos - window
+    if chunk is not None:
+        mask &= (kpos // chunk) == (pos // chunk)
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum(
+        "bkgt,btkd->bkgd",
+        probs.astype(k_cache.dtype),
+        v_cache,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(B, H, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 SSD (state-space duality) — chunked reference
+# ---------------------------------------------------------------------------
+
+
+def _segsum(x: jnp.ndarray) -> jnp.ndarray:
+    """Stable segment-sum: out[..., i, j] = sum_{k=j+1..i} x[..., k] for j<i,
+    -inf above the diagonal (no contribution)."""
+    L = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    idx = jnp.arange(L)
+    mask = idx[:, None] >= idx[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_reference(
+    x: jnp.ndarray,    # (B, L, H, P) inputs per head
+    dt: jnp.ndarray,   # (B, L, H)    softplus'd step sizes
+    A: jnp.ndarray,    # (H,)         negative decay rates
+    Bm: jnp.ndarray,   # (B, L, G, N) input projections
+    Cm: jnp.ndarray,   # (B, L, G, N) output projections
+    *,
+    chunk: int = 256,
+    initial_state: Optional[jnp.ndarray] = None,  # (B, H, P, N)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD (Mamba-2, arXiv:2405.21060 Listing 1 adapted to jnp).
+
+    Returns (y: (B, L, H, P), final_state: (B, H, P, N)).
+    """
+    Bsz, L, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    assert L % chunk == 0, (L, chunk)
+    nc = L // chunk
+    rep = H // G
+
+    f32 = jnp.float32
+    x_ = x.reshape(Bsz, nc, chunk, H, P).astype(f32)
+    dt_ = dt.reshape(Bsz, nc, chunk, H).astype(f32)
+    B_ = Bm.reshape(Bsz, nc, chunk, G, N).astype(f32)
+    C_ = Cm.reshape(Bsz, nc, chunk, G, N).astype(f32)
+
+    dA = dt_ * A.astype(f32)[None, None, None, :]          # (B, nc, c, H)
+    dA_cs = jnp.cumsum(dA, axis=2)                          # within-chunk cumsum
+
+    # 1) intra-chunk (diagonal blocks): Y_diag = (C Bᵀ ∘ L) · (dt·x)
+    Lmat = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))       # (B, nc, H, c, c)
+    CB = jnp.einsum("bzcgn,bzsgn->bzgcs", C_, B_)           # (B, nc, G, c, c)
+    CB = jnp.repeat(CB, rep, axis=2)                        # (B, nc, H, c, c)
+    dtx = x_ * dt_[..., None]                               # (B, nc, c, H, P)
+    y_diag = jnp.einsum("bzhcs,bzshp->bzchp", CB * Lmat, dtx)
+
+    # 2) chunk-final states: S_z = Σ_s exp(dA_cs[end]-dA_cs[s]) B_s ⊗ dtx_s
+    decay_to_end = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)     # (B, nc, c, H)
+    Bh = jnp.repeat(B_, rep, axis=3)                        # (B, nc, c, H, N)
+    states = jnp.einsum("bzshn,bzshp->bzhpn", Bh * decay_to_end[..., None], dtx)
+
+    # 3) inter-chunk recurrence: carry running state across chunks
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])               # (B, nc, H)
+
+    def scan_fn(carry, inp):
+        st, dec = inp  # (B,H,P,N), (B,H)
+        new = carry * dec[..., None, None] + st
+        return new, carry  # emit state *entering* this chunk
+
+    init = (
+        initial_state.astype(f32)
+        if initial_state is not None
+        else jnp.zeros((Bsz, H, P, N), f32)
+    )
+    final_state, prev_states = jax.lax.scan(
+        scan_fn,
+        init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)      # (B, nc, H, P, N)
+
+    # 4) inter-chunk output: Y_off = (C_s · S_prev) * exp(dA_cs[s])
+    state_decay = jnp.exp(dA_cs)                            # (B, nc, c, H)
+    Ch = jnp.repeat(C_, rep, axis=3)                        # (B, nc, c, H, N)
+    y_off = jnp.einsum("bzchn,bzhpn->bzchp", Ch, prev_states) * state_decay[..., None]
+
+    y = (y_diag + y_off).reshape(Bsz, L, H, P)
+    return y.astype(x.dtype), final_state
+
+
+def ssd_decode_step(
+    state: jnp.ndarray,  # (B, H, P, N)
+    x: jnp.ndarray,      # (B, H, P)
+    dt: jnp.ndarray,     # (B, H)
+    A: jnp.ndarray,      # (H,)
+    Bm: jnp.ndarray,     # (B, G, N)
+    Cm: jnp.ndarray,     # (B, G, N)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Single-token SSM recurrence: h ← h·exp(dt·A) + dt·(B ⊗ x); y = C·h."""
+    H = x.shape[1]
+    G = Bm.shape[1]
+    rep = H // G
+    f32 = jnp.float32
+    dA = jnp.exp(dt.astype(f32) * A.astype(f32)[None, :])     # (B, H)
+    Bh = jnp.repeat(Bm.astype(f32), rep, axis=1)              # (B, H, N)
+    Ch = jnp.repeat(Cm.astype(f32), rep, axis=1)
+    dBx = jnp.einsum("bhn,bhp->bhpn", Bh, x.astype(f32) * dt.astype(f32)[..., None])
+    new_state = state.astype(f32) * dA[..., None, None] + dBx
+    y = jnp.einsum("bhn,bhpn->bhp", Ch, new_state)
+    return y.astype(x.dtype), new_state.astype(state.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Fused RMSNorm (kernel hot-spot #3)
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_reference(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)).astype(x.dtype)

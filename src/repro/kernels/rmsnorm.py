@@ -1,0 +1,44 @@
+"""Pallas TPU fused RMSNorm kernel (rows × feature tiles, fp32 reduction)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rms_kernel(x_ref, w_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)              # (rows, D)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    w = w_ref[...].astype(jnp.float32)
+    o_ref[...] = (x * jax.lax.rsqrt(var + eps) * w[None, :]).astype(o_ref.dtype)
+
+
+def rmsnorm_pallas(
+    x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-5, *, rows_block: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    orig_shape = x.shape
+    D = x.shape[-1]
+    xf = x.reshape(-1, D)
+    R = xf.shape[0]
+    rows_block = min(rows_block, R)
+    nr = (R + rows_block - 1) // rows_block
+    pad = nr * rows_block - R
+    if pad:
+        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_rms_kernel, eps=eps),
+        grid=(nr,),
+        in_specs=[
+            pl.BlockSpec((rows_block, D), lambda i: (i, 0)),
+            pl.BlockSpec((D,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((rows_block, D), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nr * rows_block, D), x.dtype),
+        interpret=interpret,
+    )(xf, w)
+    return out[:R].reshape(orig_shape)

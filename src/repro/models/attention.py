@@ -1,0 +1,134 @@
+"""GQA attention block: train/prefill (flash path) + KV-cache decode.
+
+Attention variants per layer kind (configs.base):
+  attn        — global causal
+  attn_local  — sliding window (gemma3 5:1 local:global)
+  attn_chunk  — chunked local (llama4 iRoPE-style)
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+from repro.distributed.sharding import constrain
+from repro.models.layers import PD, dense, rms_norm, rope
+
+
+def attn_defs(cfg: ArchConfig) -> Dict[str, PD]:
+    d, H, KV, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    return {
+        "ln": PD((d,), (None,), init="ones"),
+        "wq": PD((d, H * Dh), (None, "tp")),
+        "wk": PD((d, KV * Dh), (None, "tp")),
+        "wv": PD((d, KV * Dh), (None, "tp")),
+        "wo": PD((H * Dh, d), ("tp", None)),
+    }
+
+
+def _kind_masks(kind: str, cfg: ArchConfig) -> Dict[str, Optional[int]]:
+    if kind == "attn_local":
+        return {"window": cfg.window, "chunk": None}
+    if kind == "attn_chunk":
+        return {"window": None, "chunk": cfg.chunk}
+    return {"window": None, "chunk": None}
+
+
+def attn_block(
+    p: Dict[str, jnp.ndarray],
+    x: jnp.ndarray,              # (B, S, d)
+    cfg: ArchConfig,
+    kind: str,
+    *,
+    positions: Optional[jnp.ndarray] = None,   # (S,)
+    causal: bool = True,
+    attn_impl: str = "reference",
+) -> jnp.ndarray:
+    B, S, d = x.shape
+    H, KV, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    h = rms_norm(x, p["ln"], cfg.rms_eps)
+    # Megatron-style head parallelism: attention is fully LOCAL per head.
+    # (Perf iteration 1, EXPERIMENTS.md §Perf: sequence-sharding activations
+    # instead put per-kv-block all-reduces INSIDE the flash loops —
+    # 640-trip collectives dominated the step.)
+    hs = cfg.head_sharded_attn
+
+    def _c(t, spec):
+        return constrain(t, spec) if hs else t
+
+    q = _c(dense(h, p["wq"]).reshape(B, S, H, Dh), ("dp", None, "tp", None))
+    k = _c(dense(h, p["wk"]).reshape(B, S, KV, Dh), ("dp", None, _kv_axis(cfg), None))
+    v = _c(dense(h, p["wv"]).reshape(B, S, KV, Dh), ("dp", None, _kv_axis(cfg), None))
+    if positions is None:
+        positions = jnp.arange(S)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    masks = _kind_masks(kind, cfg)
+    o = kops.flash_attention(
+        q, k, v, causal=causal, impl=attn_impl, **masks
+    )
+    o = _c(o, ("dp", None, "tp", None))
+    return x + dense(o.reshape(B, S, H * Dh), p["wo"])
+
+
+def _kv_axis(cfg: ArchConfig):
+    # KV heads shard over tp only when divisible (GQA kv=2..16 vs tp=16);
+    # otherwise replicate KV heads (cheap) and keep Q heads sharded.
+    return "tp" if cfg.n_kv_heads % 16 == 0 else None
+
+
+# ---------------------------------------------------------------------------
+# Decode with KV cache
+# ---------------------------------------------------------------------------
+
+
+def attn_cache_shape(cfg: ArchConfig, batch: int, seq: int) -> Dict[str, Any]:
+    KV, Dh = cfg.n_kv_heads, cfg.d_head
+    return {
+        "k": jax.ShapeDtypeStruct((batch, seq, KV, Dh), jnp.bfloat16),
+        "v": jax.ShapeDtypeStruct((batch, seq, KV, Dh), jnp.bfloat16),
+    }
+
+
+def attn_cache_spec(long_context: bool) -> Dict[str, Tuple]:
+    # decode_32k: batch over dp, kv-seq over tp (KV memory dominates).
+    # long_500k (batch=1): sequence over BOTH axes.
+    if long_context:
+        return {"k": (None, ("dp", "tp"), None, None),
+                "v": (None, ("dp", "tp"), None, None)}
+    return {"k": ("dp", "tp", None, None), "v": ("dp", "tp", None, None)}
+
+
+def attn_decode_block(
+    p: Dict[str, jnp.ndarray],
+    x: jnp.ndarray,              # (B, 1, d) the new token's activations
+    cache: Dict[str, jnp.ndarray],
+    pos: jnp.ndarray,            # scalar int32
+    cfg: ArchConfig,
+    kind: str,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    B, _, d = x.shape
+    H, KV, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    h = rms_norm(x, p["ln"], cfg.rms_eps)
+    q = dense(h, p["wq"]).reshape(B, 1, H, Dh)
+    k = dense(h, p["wk"]).reshape(B, 1, KV, Dh)
+    v = dense(h, p["wv"]).reshape(B, 1, KV, Dh)
+    q = rope(q, pos[None], cfg.rope_theta)
+    k = rope(k, pos[None], cfg.rope_theta)
+    k_cache = jax.lax.dynamic_update_slice(
+        cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0)
+    )
+    v_cache = jax.lax.dynamic_update_slice(
+        cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0)
+    )
+    masks = _kind_masks(kind, cfg)
+    o = kref.decode_attention_reference(
+        q[:, 0], k_cache, v_cache, pos, **masks
+    )
+    out = x + dense(o.reshape(B, 1, H * Dh), p["wo"])
+    return out, {"k": k_cache, "v": v_cache}

@@ -1,0 +1,217 @@
+"""Encoder-decoder transformer (whisper-tiny backbone).
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs`` provides
+precomputed frame embeddings (B, n_frames, d).  Encoder = bidirectional
+self-attention stack; decoder = causal self-attention + cross-attention.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import constrain
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+from repro.models import attention as A
+from repro.models.layers import (
+    PD,
+    dense,
+    mlp_block,
+    mlp_defs,
+    rms_norm,
+    rope,
+    stack_defs,
+)
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def _xattn_defs(cfg: ArchConfig) -> Dict[str, PD]:
+    d, H, KV, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    return {
+        "ln": PD((d,), (None,), init="ones"),
+        "wq": PD((d, H * Dh), (None, "tp")),
+        "wk": PD((d, KV * Dh), (None, "tp")),
+        "wv": PD((d, KV * Dh), (None, "tp")),
+        "wo": PD((H * Dh, d), ("tp", None)),
+    }
+
+
+def encdec_param_defs(cfg: ArchConfig) -> Dict[str, Any]:
+    enc = cfg.encoder
+    d, V = cfg.d_model, cfg.vocab
+    enc_layer = {
+        "self": A.attn_defs(cfg),
+        "ffn": mlp_defs(d, cfg.d_ff),
+    }
+    dec_layer = {
+        "self": A.attn_defs(cfg),
+        "cross": _xattn_defs(cfg),
+        "ffn": mlp_defs(d, cfg.d_ff),
+    }
+    from repro.models.transformer import vocab_axis
+
+    return {
+        "embed": PD((V, d), (vocab_axis(V), None), scale=1.0 / (d ** 0.5)),
+        "enc_pos": PD((enc.n_frames, d), (None, None)),
+        "enc": stack_defs(enc_layer, enc.n_layers),
+        "dec": stack_defs(dec_layer, cfg.n_layers),
+        "enc_ln": PD((d,), (None,), init="ones"),
+        "final_ln": PD((d,), (None,), init="ones"),
+        "lm_head": PD((d, V), (None, vocab_axis(V))),
+    }
+
+
+def _cross_attn(
+    p: Dict[str, jnp.ndarray],
+    x: jnp.ndarray,          # (B, S, d) decoder states
+    enc_k: jnp.ndarray,      # (B, T, KV, Dh) precomputed
+    enc_v: jnp.ndarray,
+    cfg: ArchConfig,
+) -> jnp.ndarray:
+    B, S, d = x.shape
+    H, KV, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    h = rms_norm(x, p["ln"], cfg.rms_eps)
+    q = dense(h, p["wq"]).reshape(B, S, H, Dh)
+    o = kref.attention_reference(q, enc_k, enc_v, causal=False)
+    return x + dense(o.reshape(B, S, H * Dh), p["wo"])
+
+
+def _enc_kv(p: Dict[str, jnp.ndarray], enc_out: jnp.ndarray, cfg: ArchConfig):
+    B, T, d = enc_out.shape
+    KV, Dh = cfg.n_kv_heads, cfg.d_head
+    k = dense(enc_out, p["wk"]).reshape(B, T, KV, Dh)
+    v = dense(enc_out, p["wv"]).reshape(B, T, KV, Dh)
+    return k, v
+
+
+def encode(params: Dict[str, Any], frames: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    """frames: (B, n_frames, d) stub frontend output → encoder states."""
+    x = frames.astype(COMPUTE_DTYPE) + params["enc_pos"].astype(COMPUTE_DTYPE)[None]
+    x = constrain(x, ("dp", None, None))
+
+    def layer(xc, lp):
+        xc = A.attn_block(lp["self"], xc, cfg, "attn", causal=False)
+        xc = mlp_block(lp["ffn"], xc, cfg.rms_eps)
+        return constrain(xc, ("dp", None, None)), None
+
+    x, _ = jax.lax.scan(layer, x, params["enc"])
+    return rms_norm(x, params["enc_ln"], cfg.rms_eps)
+
+
+def encdec_forward(
+    params: Dict[str, Any],
+    frames: jnp.ndarray,   # (B, T, d) stub frontend output
+    inputs: jnp.ndarray,   # (B, S) decoder tokens
+    cfg: ArchConfig,
+    *,
+    attn_impl: str = "reference",
+    remat: bool = True,
+) -> jnp.ndarray:
+    enc_out = encode(params, frames, cfg)
+    B, S = inputs.shape
+    x = jnp.take(params["embed"], inputs, axis=0).astype(COMPUTE_DTYPE)
+    positions = jnp.arange(S)
+
+    def layer(xc, lp):
+        xc = A.attn_block(
+            lp["self"], xc, cfg, "attn", positions=positions, attn_impl=attn_impl
+        )
+        k, v = _enc_kv(lp["cross"], enc_out, cfg)
+        xc = _cross_attn(lp["cross"], xc, k, v, cfg)
+        xc = mlp_block(lp["ffn"], xc, cfg.rms_eps)
+        return constrain(xc, ("dp", None, None)), None
+
+    body = jax.checkpoint(lambda c, p: layer(c, p)) if remat else layer
+    x, _ = jax.lax.scan(body, x, params["dec"])
+    x = rms_norm(x, params["final_ln"], cfg.rms_eps)
+    return jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype))
+
+
+def encdec_loss(
+    params: Dict[str, Any],
+    batch: Dict[str, jnp.ndarray],  # frames (B,T,d), tokens (B,S+1)
+    cfg: ArchConfig,
+    *,
+    attn_impl: str = "reference",
+    remat: bool = True,
+) -> jnp.ndarray:
+    frames, tokens = batch["frames"], batch["tokens"]
+    inputs, labels = tokens[:, :-1], tokens[:, 1:]
+    logits = encdec_forward(
+        params, frames, inputs, cfg, attn_impl=attn_impl, remat=remat
+    ).astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+
+def encdec_cache_shapes(cfg: ArchConfig, batch: int, seq: int) -> Dict[str, Any]:
+    enc = cfg.encoder
+    KV, Dh = cfg.n_kv_heads, cfg.d_head
+    per = {
+        "self": A.attn_cache_shape(cfg, batch, seq),
+        "cross_k": jax.ShapeDtypeStruct((batch, enc.n_frames, KV, Dh), jnp.bfloat16),
+        "cross_v": jax.ShapeDtypeStruct((batch, enc.n_frames, KV, Dh), jnp.bfloat16),
+    }
+    return {
+        "dec": jax.tree_util.tree_map(
+            lambda sds: jax.ShapeDtypeStruct((cfg.n_layers,) + sds.shape, sds.dtype),
+            per,
+        )
+    }
+
+
+def encdec_cache_specs(cfg: ArchConfig, long_context: bool) -> Dict[str, Any]:
+    per = {
+        "self": A.attn_cache_spec(long_context),
+        # whisper has 6 KV heads (not divisible by tp=16) and only 1500
+        # encoder frames — keep cross-KV replicated over tp
+        "cross_k": ("dp", None, None, None),
+        "cross_v": ("dp", None, None, None),
+    }
+    return {
+        "dec": jax.tree_util.tree_map(
+            lambda s: (None,) + s, per, is_leaf=lambda s: isinstance(s, tuple)
+        )
+    }
+
+
+def encdec_decode_step(
+    params: Dict[str, Any],
+    caches: Dict[str, Any],
+    token: jnp.ndarray,
+    pos: jnp.ndarray,
+    cfg: ArchConfig,
+) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """Decoder step against precomputed cross-KV (encoder ran at prefill)."""
+    x = jnp.take(params["embed"], token, axis=0)[:, None, :].astype(COMPUTE_DTYPE)
+
+    def layer(xc, inp):
+        lp, cc = inp
+        xc, new_self = A.attn_decode_block(lp["self"], xc, cc["self"], pos, cfg, "attn")
+        B = xc.shape[0]
+        H, KV, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+        h = rms_norm(xc, lp["cross"]["ln"], cfg.rms_eps)
+        q = dense(h, lp["cross"]["wq"]).reshape(B, H, Dh)
+        o = kref.decode_attention_reference(
+            q, cc["cross_k"], cc["cross_v"], jnp.asarray(cc["cross_k"].shape[1] - 1)
+        )
+        xc = xc + dense(o.reshape(B, 1, H * Dh), lp["cross"]["wo"])
+        xc = mlp_block(lp["ffn"], xc, cfg.rms_eps)
+        return xc, {"self": new_self, "cross_k": cc["cross_k"], "cross_v": cc["cross_v"]}
+
+    x, new_dec = jax.lax.scan(layer, x, (params["dec"], caches["dec"]))
+    x = rms_norm(x, params["final_ln"], cfg.rms_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype))[:, 0]
+    return logits.astype(jnp.float32), {"dec": new_dec}

@@ -1,0 +1,112 @@
+"""Mixture-of-Experts block — GShard-style capacity dispatch.
+
+Experts are expert-parallel over the "tp" logical axis (16 experts on a
+16-wide model axis = 1 expert/group for llama4-scout; 8/group for maverick's
+128).  Dispatch/combine einsums against the token dimension lower to
+all-to-all-style collectives under GSPMD — the collective roofline term for
+the MoE cells comes from here.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, MoECfg
+from repro.models.layers import PD, dense, rms_norm
+
+
+def moe_defs(cfg: ArchConfig) -> Dict[str, PD]:
+    d = cfg.d_model
+    m = cfg.moe
+    # experts EP over tp; within-expert dims additionally dp-sharded so the
+    # 100-400B expert stacks fit (ZeRO-3-style weight sharding — GSPMD
+    # all-gathers per layer, overlapped with the scan)
+    return {
+        "ln": PD((d,), (None,), init="ones"),
+        "w_gate": PD((d, m.n_experts), (None, None)),
+        "w_in": PD((m.n_experts, d, 2 * m.d_ff_expert), ("tp", None, "dp")),
+        "w_out": PD((m.n_experts, m.d_ff_expert, d), ("tp", "dp", None)),
+    }
+
+
+def moe_block(
+    p: Dict[str, jnp.ndarray],
+    x: jnp.ndarray,  # (B, S, d)
+    cfg: ArchConfig,
+    *,
+    capacity_factor: Optional[float] = None,
+    dispatch: str = "gather",   # "gather" (sparse, O(T·d)) | "einsum" (GShard)
+) -> jnp.ndarray:
+    """GShard-style grouped dispatch: each batch row is a dispatch group with
+    capacity C = ceil(S·K·cf/E) — keeps every buffer O(local tokens), unlike
+    a global-capacity formulation whose (T, E, C_global) dispatch tensor is
+    quadratic in tokens."""
+    m = cfg.moe
+    B, S, d = x.shape
+    E, K = m.n_experts, m.top_k
+    cf = capacity_factor if capacity_factor is not None else m.capacity_factor
+    C = max(K, int(S * K * cf / E))
+
+    h = rms_norm(x, p["ln"], cfg.rms_eps)                       # (B, S, d)
+    logits = jnp.einsum(
+        "bsd,de->bse", h.astype(jnp.float32), p["w_gate"].astype(jnp.float32)
+    )
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)               # (B, S, K)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # rank of each (s, k) assignment within its expert, per group (k-major)
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.int32)       # (B, S, K, E)
+    flat = onehot.reshape(B, S * K, E)
+    ranks = jnp.cumsum(flat, axis=1) - flat                     # (B, S*K, E)
+    pos_in_expert = (ranks * flat).sum(-1).reshape(B, S, K)
+    keep = pos_in_expert < C
+    if dispatch == "einsum":
+        slot = jax.nn.one_hot(
+            jnp.where(keep, pos_in_expert, C), C + 1, dtype=h.dtype
+        )[..., :C]                                               # (B, S, K, C)
+        eoh = jax.nn.one_hot(gate_idx, E, dtype=h.dtype)         # (B, S, K, E)
+        disp = jnp.einsum("bske,bskc->bsec", eoh, slot)          # (B, S, E, C)
+        comb = jnp.einsum(
+            "bske,bskc->bsec",
+            eoh * (gate_vals.astype(h.dtype) * keep.astype(h.dtype))[..., None],
+            slot,
+        )
+
+    if dispatch == "einsum":
+        expert_in = jnp.einsum("bsec,bsd->becd", disp, h)        # (B, E, C, d)
+    else:
+        # gather dispatch (§Perf: the one-hot dispatch matmul costs
+        # B·S·E·C·d flops ≈ a d×d matmul per MoE layer — pure waste; a
+        # token-index gather moves the same data at O(tokens·d))
+        # slot_token[b, e, c] = index of the token in slot (e, c), or S (pad)
+        slot_token = jnp.full((B, E, C), S, dtype=jnp.int32)
+        s_idx = jnp.broadcast_to(jnp.arange(S)[None, :, None], gate_idx.shape)
+        slot_token = slot_token.at[
+            jnp.arange(B)[:, None, None],
+            gate_idx,
+            jnp.where(keep, pos_in_expert, C),  # C = out of bounds -> dropped
+        ].set(s_idx, mode="drop")
+        h_pad = jnp.concatenate([h, jnp.zeros((B, 1, d), h.dtype)], axis=1)
+        expert_in = jnp.take_along_axis(
+            h_pad, slot_token.reshape(B, E * C)[:, :, None], axis=1
+        ).reshape(B, E, C, d)
+    gates_ups = jnp.einsum("becd,edf->becf", expert_in, p["w_in"].astype(h.dtype))
+    gate, up = jnp.split(gates_ups, 2, axis=-1)
+    act = jax.nn.silu(gate) * up
+    expert_out = jnp.einsum("becf,efd->becd", act, p["w_out"].astype(h.dtype))
+    if dispatch == "einsum":
+        y = jnp.einsum("bsec,becd->bsd", comb, expert_out)       # (B, S, d)
+    else:
+        # combine by gathering each token's (expert, slot) output
+        flat_out = expert_out.reshape(B, E * C, d)
+        tok_slot = gate_idx * C + jnp.where(keep, pos_in_expert, 0)  # (B,S,K)
+        gathered = jnp.take_along_axis(
+            flat_out, tok_slot.reshape(B, S * K)[:, :, None], axis=1
+        ).reshape(B, S, K, d)
+        w = (gate_vals * keep.astype(gate_vals.dtype)).astype(h.dtype)
+        y = jnp.einsum("bskd,bsk->bsd", gathered, w)
+    return x + y

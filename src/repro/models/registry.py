@@ -1,0 +1,205 @@
+"""Uniform Model facade over all families: params, specs, inputs, steps.
+
+Everything the launcher / dry-run / tests need for an (arch × shape) cell:
+
+  model.init(rng)                      real params (smoke tests, examples)
+  model.abstract_params()              ShapeDtypeStructs (dry-run, no alloc)
+  model.param_specs()                  logical PartitionSpec tree
+  model.input_specs(shape)             (inputs SDS tree, logical spec tree)
+  model.loss(params, batch)            train/prefill loss
+  model.decode_step(params, caches, token, pos)
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import encdec as E
+from repro.models import transformer as T
+from repro.models import vlm as V
+from repro.models.layers import abstract_tree, init_tree, spec_tree
+
+
+@dataclass
+class Model:
+    cfg: ArchConfig
+    attn_impl: str = "reference"
+    remat: bool = True
+
+    # -- params ---------------------------------------------------------------
+    def param_defs(self):
+        if self.cfg.family == "audio":
+            defs = E.encdec_param_defs(self.cfg)
+        elif self.cfg.family == "vlm":
+            defs = V.vlm_param_defs(self.cfg)
+        else:
+            defs = T.lm_param_defs(self.cfg)
+        if self.cfg.zero3_weights:
+            defs = _apply_zero3(defs)
+        return defs
+
+    def init(self, rng: jax.Array):
+        return init_tree(self.param_defs(), rng)
+
+    def abstract_params(self):
+        return abstract_tree(self.param_defs())
+
+    def param_specs(self):
+        return spec_tree(self.param_defs())
+
+    # -- inputs -----------------------------------------------------------------
+    def input_specs(self, shape: ShapeConfig) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        if shape.kind in ("train", "prefill"):
+            inputs = {"tokens": jax.ShapeDtypeStruct((B, S + 1), jnp.int32)}
+            specs = {"tokens": ("dp", None)}
+            if cfg.family == "vlm":
+                inputs["patch_embeds"] = jax.ShapeDtypeStruct(
+                    (B, cfg.vision.n_patches, cfg.vision.d_vision), jnp.bfloat16
+                )
+                specs["patch_embeds"] = ("dp", None, None)
+            if cfg.family == "audio":
+                inputs["frames"] = jax.ShapeDtypeStruct(
+                    (B, cfg.encoder.n_frames, cfg.encoder.d_frame), jnp.bfloat16
+                )
+                specs["frames"] = ("dp", None, None)
+            return inputs, specs
+        # decode: one new token against a seq_len cache
+        long_ctx = B < 16  # batch can't cover the dp axis — shard the sequence
+        caches = (
+            E.encdec_cache_shapes(cfg, B, S)
+            if cfg.family == "audio"
+            else T.lm_cache_shapes(cfg, B, S)
+        )
+        cache_specs = (
+            E.encdec_cache_specs(cfg, long_ctx)
+            if cfg.family == "audio"
+            else T.lm_cache_specs(cfg, long_ctx)
+        )
+        inputs = {
+            "caches": caches,
+            "token": jax.ShapeDtypeStruct((B,), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+        specs = {
+            "caches": cache_specs,
+            "token": ("dp",) if not long_ctx else (None,),
+            "pos": (),
+        }
+        return inputs, specs
+
+    # -- steps ---------------------------------------------------------------------
+    def loss(self, params, batch):
+        cfg = self.cfg
+        if cfg.family == "audio":
+            return E.encdec_loss(
+                params, batch, cfg, attn_impl=self.attn_impl, remat=self.remat
+            )
+        if cfg.family == "vlm":
+            return V.vlm_loss(
+                params, batch, cfg, attn_impl=self.attn_impl, remat=self.remat
+            )
+        return T.lm_loss(
+            params, batch, cfg, attn_impl=self.attn_impl, remat=self.remat
+        )
+
+    def decode_step(self, params, caches, token, pos):
+        cfg = self.cfg
+        if cfg.family == "audio":
+            return E.encdec_decode_step(params, caches, token, pos, cfg)
+        return T.lm_decode_step(params, caches, token, pos, cfg)
+
+    def forward(self, params, tokens, **kw):
+        return T.lm_forward(
+            params, tokens, self.cfg, attn_impl=self.attn_impl, remat=self.remat, **kw
+        )
+
+    def forward_step(self, params, batch):
+        """Inference prefill: batch → logits (serve-side prefill compute)."""
+        cfg = self.cfg
+        tokens = batch["tokens"][:, :-1]
+        if cfg.family == "audio":
+            return E.encdec_forward(
+                params, batch["frames"], tokens, cfg,
+                attn_impl=self.attn_impl, remat=self.remat,
+            )
+        prefix = None
+        if cfg.family == "vlm":
+            from repro.models.layers import dense
+
+            prefix = dense(
+                batch["patch_embeds"].astype(jnp.bfloat16), params["vision_proj"]
+            )
+        return T.lm_forward(
+            params, tokens, cfg,
+            attn_impl=self.attn_impl, remat=self.remat, prefix_embeds=prefix,
+        )
+
+    def serve_step_fn(self) -> Callable:
+        def serve_step(params, caches, token, pos):
+            return self.decode_step(params, caches, token, pos)
+
+        return serve_step
+
+    def loss_fn(self) -> Callable:
+        def loss(params, batch):
+            return self.loss(params, batch)
+
+        return loss
+
+    def n_params(self) -> int:
+        total = 0
+        for sds in jax.tree_util.tree_leaves(self.abstract_params()):
+            n = 1
+            for s in sds.shape:
+                n *= s
+            total += n
+        return total
+
+    def n_active_params(self) -> int:
+        """Active per token (MoE counts top_k of n_experts)."""
+        if self.cfg.moe is None:
+            return self.n_params()
+        m = self.cfg.moe
+        total = 0
+        for path, sds in jax.tree_util.tree_flatten_with_path(self.abstract_params())[0]:
+            n = 1
+            for s in sds.shape:
+                n *= s
+            keys = "/".join(str(getattr(k, "key", k)) for k in path)
+            if "ffn_moe" in keys and ("w_in" in keys or "w_out" in keys):
+                n = n * m.top_k // m.n_experts
+            total += n
+        return total
+
+
+def _apply_zero3(defs):
+    """ZeRO-3-style: dp-shard every ≥2D weight on the first unsharded dim
+    divisible by 32 (valid on both production meshes)."""
+    from repro.models.layers import PD
+
+    def one(pd):
+        if not isinstance(pd, PD) or len(pd.shape) < 2:
+            return pd
+        axes = {a for s in pd.spec for a in ((s,) if isinstance(s, str) else (s or ()))}
+        if "dp" in axes:
+            return pd
+        spec = list(pd.spec)
+        for i, (ax, dim) in enumerate(zip(spec, pd.shape)):
+            if ax is None and dim % 32 == 0 and dim >= 32:
+                spec[i] = "dp"
+                return PD(pd.shape, tuple(spec), pd.init, pd.scale, pd.dtype)
+        return pd
+
+    return jax.tree_util.tree_map(one, defs, is_leaf=lambda x: isinstance(x, PD))
+
+
+def build_model(cfg: ArchConfig, **kw) -> Model:
+    return Model(cfg, **kw)

@@ -1,0 +1,327 @@
+"""Decoder-only LM assembled from the per-layer pattern (all LM families).
+
+The layer stack is executed as ``lax.scan`` over *pattern periods* (e.g.
+gemma3's (5×local + global), jamba's (4×mamba, attn, 3×mamba) with MoE every
+other layer), with remainder layers unrolled in a tail — this keeps the HLO
+O(period) instead of O(n_layers), which is what makes 62-72 layer configs
+compile fast and keeps scan-carried activation sharding uniform.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.distributed.sharding import constrain
+from repro.models import attention as A
+from repro.models import moe as M
+from repro.models import ssm as S
+from repro.models.layers import (
+    PD,
+    abstract_tree,
+    dense,
+    init_tree,
+    mlp_block,
+    mlp_defs,
+    rms_norm,
+    spec_tree,
+    stack_defs,
+)
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# Layer definitions from the pattern
+# ---------------------------------------------------------------------------
+
+
+def _layer_defs(cfg: ArchConfig, layer_idx: int) -> Dict[str, Any]:
+    kind = cfg.pattern[layer_idx]
+    defs: Dict[str, Any] = {}
+    if kind == "mamba":
+        defs["mixer"] = S.mamba_defs(cfg)
+    else:
+        defs["mixer"] = A.attn_defs(cfg)
+    if cfg.moe is not None and cfg.moe_layer_mask()[layer_idx]:
+        defs["ffn_moe"] = M.moe_defs(cfg)
+    elif cfg.d_ff > 0:
+        defs["ffn"] = mlp_defs(cfg.d_model, cfg.d_ff)
+    return defs
+
+
+def _segments(cfg: ArchConfig) -> Tuple[int, int, int]:
+    p = max(1, cfg.scan_period)
+    n_periods = cfg.n_layers // p
+    rem = cfg.n_layers - n_periods * p
+    # pattern must actually be periodic over the scanned prefix
+    for i in range(n_periods * p):
+        assert cfg.pattern[i] == cfg.pattern[i % p], (cfg.name, i)
+    if cfg.moe is not None:
+        assert p % cfg.moe.every == 0 or cfg.moe.every % p == 0 or cfg.moe.every == 1
+    return p, n_periods, rem
+
+
+def vocab_axis(V: int) -> Any:
+    """Vocab-parallel only when the vocab divides the 16-wide model axis —
+    whisper (51865) / internvl (92553) / mamba2 (50280) replicate instead."""
+    return "tp" if V % 16 == 0 else None
+
+
+def lm_param_defs(cfg: ArchConfig) -> Dict[str, Any]:
+    p, n_periods, rem = _segments(cfg)
+    d, V = cfg.d_model, cfg.vocab
+    defs: Dict[str, Any] = {
+        "embed": PD((V, d), (vocab_axis(V), None), scale=1.0 / (d ** 0.5)),
+        "final_ln": PD((d,), (None,), init="ones"),
+    }
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = PD((d, V), (None, vocab_axis(V)))
+    if n_periods > 0:
+        period_defs = {f"l{j}": _layer_defs(cfg, j) for j in range(p)}
+        defs["scan"] = stack_defs(period_defs, n_periods)
+    for i in range(rem):
+        defs[f"tail{i}"] = _layer_defs(cfg, n_periods * p + i)
+    return defs
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _block_fwd(
+    lp: Dict[str, Any],
+    x: jnp.ndarray,
+    cfg: ArchConfig,
+    kind: str,
+    positions: jnp.ndarray,
+    attn_impl: str,
+) -> jnp.ndarray:
+    if kind == "mamba":
+        x = S.mamba_block(lp["mixer"], x, cfg, ssd_impl=attn_impl_to_ssd(attn_impl))
+    else:
+        x = A.attn_block(
+            lp["mixer"], x, cfg, kind, positions=positions, attn_impl=attn_impl
+        )
+    if "ffn_moe" in lp:
+        x = M.moe_block(lp["ffn_moe"], x, cfg)
+    elif "ffn" in lp:
+        x = mlp_block(lp["ffn"], x, cfg.rms_eps)
+    # Megatron-SP hybrid (§Perf iteration 6): activations SEQUENCE-sharded
+    # between layers (all-gather at block entry / reduce-scatter at exit),
+    # heads/ffn sharded INSIDE blocks.  Replicated-interlayer (iteration 1)
+    # turned every row-parallel output into a full-tensor all-reduce
+    # (jamba: 1.6 TB/chip); plain seq-sharding without the internal head
+    # constraints (baseline) pushed permutes inside the flash loops.
+    return constrain(x, ("dp", "tp", None))
+
+
+def attn_impl_to_ssd(attn_impl: str) -> str:
+    return attn_impl  # same dispatch vocabulary
+
+
+def lm_forward(
+    params: Dict[str, Any],
+    tokens: jnp.ndarray,  # (B, S) int32
+    cfg: ArchConfig,
+    *,
+    attn_impl: str = "reference",
+    remat: bool = True,
+    prefix_embeds: Optional[jnp.ndarray] = None,  # (B, Sp, d) VLM patches
+) -> jnp.ndarray:
+    p, n_periods, rem = _segments(cfg)
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(COMPUTE_DTYPE)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(COMPUTE_DTYPE), x], axis=1)
+    Sf = x.shape[1]
+    positions = jnp.arange(Sf)
+    x = constrain(x, ("dp", None, None))
+
+    def period_fn(xc, pp):
+        # NOTE: per-layer nested remat was tried (§Perf iteration 2) and
+        # REFUTED — it re-ran each layer's collectives in the backward
+        # (+23% collective bytes) without reducing live memory.
+        for j in range(p):
+            xc = _block_fwd(
+                pp[f"l{j}"], xc, cfg, cfg.pattern[j], positions, attn_impl
+            )
+        return xc
+
+    if n_periods > 0:
+        body = jax.checkpoint(period_fn) if remat else period_fn
+
+        def scan_fn(xc, pp):
+            return body(xc, pp), None
+
+        x, _ = jax.lax.scan(scan_fn, x, params["scan"])
+    for i in range(rem):
+        kind = cfg.pattern[n_periods * p + i]
+        lp = params[f"tail{i}"]
+        fn = functools.partial(
+            _block_fwd, cfg=cfg, kind=kind, positions=positions, attn_impl=attn_impl
+        )
+        x = jax.checkpoint(fn)(lp, x) if remat else fn(lp, x)
+
+    x = rms_norm(x, params["final_ln"], cfg.rms_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype))
+    return constrain(logits, ("dp", None, vocab_axis(cfg.vocab)))
+
+
+def lm_loss(
+    params: Dict[str, Any],
+    batch: Dict[str, jnp.ndarray],
+    cfg: ArchConfig,
+    *,
+    attn_impl: str = "reference",
+    remat: bool = True,
+) -> jnp.ndarray:
+    tokens = batch["tokens"]
+    inputs, labels = tokens[:, :-1], tokens[:, 1:]
+    prefix = batch.get("prefix_embeds")  # VLM: projected patch embeddings
+    logits = lm_forward(
+        params, inputs, cfg, attn_impl=attn_impl, remat=remat, prefix_embeds=prefix
+    )
+    if prefix is not None:
+        logits = logits[:, prefix.shape[1]:]
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+# ---------------------------------------------------------------------------
+# Decode (serve_step): one token against stacked KV/SSM caches
+# ---------------------------------------------------------------------------
+
+
+def lm_cache_shapes(cfg: ArchConfig, batch: int, seq: int) -> Dict[str, Any]:
+    p, n_periods, rem = _segments(cfg)
+
+    def layer_cache(kind):
+        if kind == "mamba":
+            return S.mamba_cache_shape(cfg, batch)
+        return A.attn_cache_shape(cfg, batch, seq)
+
+    out: Dict[str, Any] = {}
+    if n_periods > 0:
+        per = {f"l{j}": layer_cache(cfg.pattern[j]) for j in range(p)}
+        out["scan"] = jax.tree_util.tree_map(
+            lambda sds: jax.ShapeDtypeStruct((n_periods,) + sds.shape, sds.dtype), per
+        )
+    for i in range(rem):
+        out[f"tail{i}"] = layer_cache(cfg.pattern[n_periods * p + i])
+    return out
+
+
+def lm_cache_specs(cfg: ArchConfig, long_context: bool) -> Dict[str, Any]:
+    p, n_periods, rem = _segments(cfg)
+
+    def layer_spec(kind):
+        if kind == "mamba":
+            return S.mamba_cache_spec(long_context)
+        return A.attn_cache_spec(long_context)
+
+    out: Dict[str, Any] = {}
+    if n_periods > 0:
+        per = {f"l{j}": layer_spec(cfg.pattern[j]) for j in range(p)}
+        out["scan"] = jax.tree_util.tree_map(
+            lambda s: (None,) + s, per, is_leaf=lambda s: isinstance(s, tuple)
+        )
+    for i in range(rem):
+        out[f"tail{i}"] = layer_spec(cfg.pattern[n_periods * p + i])
+    return out
+
+
+def _block_decode(
+    lp: Dict[str, Any],
+    cache: Dict[str, Any],
+    x: jnp.ndarray,
+    pos: jnp.ndarray,
+    cfg: ArchConfig,
+    kind: str,
+) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    if kind == "mamba":
+        x, new_cache = S.mamba_decode_block(lp["mixer"], x, cache, pos, cfg)
+    else:
+        x, new_cache = A.attn_decode_block(lp["mixer"], x, cache, pos, cfg, kind)
+    if "ffn_moe" in lp:
+        x = M.moe_block(lp["ffn_moe"], x, cfg)
+    elif "ffn" in lp:
+        x = mlp_block(lp["ffn"], x, cfg.rms_eps)
+    return x, new_cache
+
+
+def lm_decode_step(
+    params: Dict[str, Any],
+    caches: Dict[str, Any],
+    token: jnp.ndarray,  # (B,) int32
+    pos: jnp.ndarray,    # scalar int32
+    cfg: ArchConfig,
+) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """One decode step: returns (logits (B, V), new caches)."""
+    p, n_periods, rem = _segments(cfg)
+    x = jnp.take(params["embed"], token, axis=0)[:, None, :].astype(COMPUTE_DTYPE)
+
+    new_caches: Dict[str, Any] = {}
+    if n_periods > 0:
+
+        def period_step(xc, inp):
+            pp, cc = inp
+            new_cc = {}
+            for j in range(p):
+                xc, new_cc[f"l{j}"] = _block_decode(
+                    pp[f"l{j}"], cc[f"l{j}"], xc, pos, cfg, cfg.pattern[j]
+                )
+            return xc, new_cc
+
+        x, new_caches["scan"] = jax.lax.scan(
+            period_step, x, (params["scan"], caches["scan"])
+        )
+    for i in range(rem):
+        kind = cfg.pattern[n_periods * p + i]
+        x, new_caches[f"tail{i}"] = _block_decode(
+            params[f"tail{i}"], caches[f"tail{i}"], x, pos, cfg, kind
+        )
+
+    x = rms_norm(x, params["final_ln"], cfg.rms_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype))[:, 0]
+    return logits.astype(jnp.float32), new_caches
+
+
+# ---------------------------------------------------------------------------
+# Prefill (examples/serving): full forward that also fills the caches
+# ---------------------------------------------------------------------------
+
+
+def lm_prefill(
+    params: Dict[str, Any],
+    tokens: jnp.ndarray,  # (B, S)
+    cache_len: int,
+    cfg: ArchConfig,
+    *,
+    attn_impl: str = "reference",
+) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """Sequential decode-based prefill (simple + exact; examples only)."""
+    B, S = tokens.shape
+    caches = jax.tree_util.tree_map(
+        lambda sds: jnp.zeros(sds.shape, sds.dtype),
+        lm_cache_shapes(cfg, B, cache_len),
+    )
+
+    def step(carry, t):
+        caches, _ = carry
+        logits, caches = lm_decode_step(params, caches, tokens[:, t], t, cfg)
+        return (caches, logits), None
+
+    (caches, logits), _ = jax.lax.scan(
+        step, (caches, jnp.zeros((B, cfg.vocab), jnp.float32)), jnp.arange(S)
+    )
+    return logits, caches

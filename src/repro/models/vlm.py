@@ -1,0 +1,38 @@
+"""VLM wrapper (internvl2): ViT-frontend STUB + projector + LM backbone.
+
+``input_specs`` provides precomputed patch embeddings (B, n_patches,
+d_vision); the projector maps them to d_model and they are prepended to the
+token embeddings (early-fusion prefix).  Loss is computed on text positions.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import PD, dense
+from repro.models.transformer import lm_loss, lm_param_defs
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def vlm_param_defs(cfg: ArchConfig) -> Dict[str, Any]:
+    defs = lm_param_defs(cfg)
+    defs["vision_proj"] = PD((cfg.vision.d_vision, cfg.d_model), (None, "tp"))
+    return defs
+
+
+def vlm_loss(
+    params: Dict[str, Any],
+    batch: Dict[str, jnp.ndarray],
+    cfg: ArchConfig,
+    *,
+    attn_impl: str = "reference",
+    remat: bool = True,
+) -> jnp.ndarray:
+    prefix = dense(batch["patch_embeds"].astype(COMPUTE_DTYPE), params["vision_proj"])
+    lm_batch = {"tokens": batch["tokens"], "prefix_embeds": prefix}
+    return lm_loss(params, lm_batch, cfg, attn_impl=attn_impl, remat=remat)

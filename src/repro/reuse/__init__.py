@@ -1,0 +1,3 @@
+from repro.reuse.manager import MaterializationStore, ReuseManager, ReuseStats
+
+__all__ = ["MaterializationStore", "ReuseManager", "ReuseStats"]

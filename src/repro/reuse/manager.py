@@ -1,0 +1,148 @@
+"""Veer-driven materialization reuse (paper Use cases 1 & 2).
+
+``ReuseManager.submit(dag, sources)`` — before executing a new pipeline
+version, try to *verify* each of its sinks equivalent to an
+already-executed version's sink via Veer; verified sinks are served from
+the content-addressed store instead of recomputed.  The store is shared
+with checkpointing (same hashing scheme), so equivalent results are stored
+once (Use case 2: no periodic de-duplication pass needed).
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import pathlib
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.dag import DataflowDAG
+from repro.core.edits import identity_mapping
+from repro.core.verifier import Veer
+from repro.engine.executor import execute
+from repro.engine.table import Table
+
+
+@dataclass
+class ReuseStats:
+    submissions: int = 0
+    sink_hits: int = 0
+    sink_misses: int = 0
+    executions: int = 0
+    verify_time: float = 0.0
+    execute_time: float = 0.0
+    dedup_skipped_writes: int = 0
+
+
+@dataclass
+class _Version:
+    vid: int
+    dag: DataflowDAG
+    sink_objects: Dict[str, str]  # sink id -> object digest
+
+
+class MaterializationStore:
+    def __init__(self, directory: str):
+        self.dir = pathlib.Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+
+    def put(self, table: Table) -> Tuple[str, bool]:
+        h = hashlib.sha256()
+        h.update(repr(table.order).encode())
+        for c in table.order:
+            arr = table.cols[c]
+            h.update(np.asarray(arr, dtype=object if arr.dtype == object else arr.dtype).tobytes() if arr.dtype != object else repr(list(arr)).encode())
+        digest = h.hexdigest()[:32]
+        path = self.dir / f"{digest}.npz"
+        if path.exists():
+            return digest, False
+        payload = {}
+        meta = {"order": table.order, "object_cols": []}
+        for c in table.order:
+            arr = table.cols[c]
+            if arr.dtype == object:
+                meta["object_cols"].append(c)
+                payload[c] = np.array([json.dumps(_jsonable(v)) for v in arr])
+            else:
+                payload[c] = arr
+        np.savez(path, **payload)
+        (self.dir / f"{digest}.json").write_text(json.dumps(meta))
+        return digest, True
+
+    def get(self, digest: str) -> Table:
+        meta = json.loads((self.dir / f"{digest}.json").read_text())
+        data = np.load(self.dir / f"{digest}.npz", allow_pickle=False)
+        cols = {}
+        for c in meta["order"]:
+            arr = data[c]
+            if c in meta["object_cols"]:
+                arr = np.array([json.loads(s) for s in arr], dtype=object)
+            cols[c] = arr
+        return Table(cols, meta["order"])
+
+
+def _jsonable(v):
+    if isinstance(v, (np.integer,)):
+        return int(v)
+    if isinstance(v, (np.floating,)):
+        return float(v)
+    if isinstance(v, (list, tuple, np.ndarray)):
+        return [_jsonable(x) for x in v]
+    return v
+
+
+class ReuseManager:
+    def __init__(self, directory: str, veer: Veer, *, semantics: str = "bag"):
+        self.store = MaterializationStore(directory)
+        self.veer = veer
+        self.semantics = semantics
+        self.versions: List[_Version] = []
+        self.stats = ReuseStats()
+
+    def submit(
+        self, dag: DataflowDAG, sources: Dict[str, Table]
+    ) -> Dict[str, Table]:
+        """Execute (or reuse) a pipeline version; returns sink tables."""
+        self.stats.submissions += 1
+        dag.validate()
+        sinks = dag.sinks
+        results: Dict[str, Table] = {}
+        remaining = set(sinks)
+
+        for prev in reversed(self.versions):
+            if not remaining:
+                break
+            t0 = time.perf_counter()
+            verdict, _ = self.veer.verify(
+                prev.dag, dag, semantics=self.semantics
+            )
+            self.stats.verify_time += time.perf_counter() - t0
+            if verdict is True:
+                mapping = identity_mapping(prev.dag, dag).forward
+                for psink, digest in prev.sink_objects.items():
+                    qsink = mapping.get(psink)
+                    if qsink in remaining:
+                        results[qsink] = self.store.get(digest)
+                        remaining.discard(qsink)
+                        self.stats.sink_hits += 1
+
+        if remaining:
+            t0 = time.perf_counter()
+            executed = execute(dag, sources)
+            self.stats.execute_time += time.perf_counter() - t0
+            self.stats.executions += 1
+            for s in remaining:
+                results[s] = executed[s]
+                self.stats.sink_misses += 1
+
+        sink_objects = {}
+        for s in sinks:
+            digest, wrote = self.store.put(results[s])
+            if not wrote:
+                self.stats.dedup_skipped_writes += 1
+            sink_objects[s] = digest
+        self.versions.append(_Version(len(self.versions), dag, sink_objects))
+        return results

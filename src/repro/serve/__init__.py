@@ -1,0 +1,3 @@
+from repro.serve.decode import greedy_generate, init_caches
+
+__all__ = ["greedy_generate", "init_caches"]

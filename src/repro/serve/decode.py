@@ -1,0 +1,52 @@
+"""Batched serving: prefill + greedy decode against the KV/SSM caches."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec as E
+from repro.models import transformer as T
+from repro.models.registry import Model
+
+
+def init_caches(model: Model, batch: int, cache_len: int):
+    cfg = model.cfg
+    shapes = (
+        E.encdec_cache_shapes(cfg, batch, cache_len)
+        if cfg.family == "audio"
+        else T.lm_cache_shapes(cfg, batch, cache_len)
+    )
+    return jax.tree_util.tree_map(
+        lambda sds: jnp.zeros(sds.shape, sds.dtype), shapes
+    )
+
+
+def greedy_generate(
+    model: Model,
+    params,
+    prompt: jnp.ndarray,  # (B, S0) int32
+    *,
+    max_new_tokens: int,
+    cache_len: Optional[int] = None,
+) -> jnp.ndarray:
+    """Prefill the prompt token-by-token then decode greedily (jit'd step)."""
+    B, S0 = prompt.shape
+    cache_len = cache_len or (S0 + max_new_tokens)
+    caches = init_caches(model, B, cache_len)
+    step = jax.jit(
+        lambda p, c, t, pos: model.decode_step(p, c, t, pos)
+    )
+
+    logits = None
+    for t in range(S0):
+        logits, caches = step(params, caches, prompt[:, t], jnp.asarray(t))
+    out = [jnp.argmax(logits, axis=-1)]
+    for i in range(max_new_tokens - 1):
+        logits, caches = step(
+            params, caches, out[-1].astype(jnp.int32), jnp.asarray(S0 + i)
+        )
+        out.append(jnp.argmax(logits, axis=-1))
+    return jnp.stack(out, axis=1)

@@ -1,0 +1,4 @@
+from repro.train.optimizer import AdamW, AdamWConfig
+from repro.train.train_step import make_train_step
+
+__all__ = ["AdamW", "AdamWConfig", "make_train_step"]

@@ -1,0 +1,106 @@
+"""Training loop: checkpoint/restart, failure injection, straggler watch.
+
+``fit`` is what examples/tests drive on CPU; the same loop body is what
+``launch/train.py`` runs under the production mesh — the loop is oblivious
+to sharding (the jitted step carries it).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterator, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.distributed.fault import FailureInjector, InjectedFailure, StragglerMonitor
+from repro.models.registry import Model
+from repro.train.optimizer import AdamW
+from repro.train.train_step import make_train_step
+
+
+@dataclass
+class FitResult:
+    losses: List[float] = field(default_factory=list)
+    resumed_from: Optional[int] = None
+    steps_run: int = 0
+    straggler_steps: List[int] = field(default_factory=list)
+    final_step: int = 0
+
+
+def fit(
+    model: Model,
+    optimizer: AdamW,
+    batches: Iterator[Dict[str, Any]],
+    *,
+    steps: int,
+    ckpt: Optional[CheckpointManager] = None,
+    ckpt_every: int = 20,
+    rng: Optional[jax.Array] = None,
+    params: Any = None,
+    failure: Optional[FailureInjector] = None,
+    log_every: int = 10,
+    log: Callable[[str], None] = print,
+    microbatches: int = 1,
+) -> FitResult:
+    res = FitResult()
+    if params is None:
+        params = model.init(rng if rng is not None else jax.random.PRNGKey(0))
+    opt_state = optimizer.init(params)
+    start_step = 0
+
+    if ckpt is not None and ckpt.latest_step() is not None:
+        (params, opt_state), meta = ckpt.restore(None, (params, opt_state))
+        start_step = int(meta["step"])
+        res.resumed_from = start_step
+        log(f"[fit] resumed from checkpoint step {start_step}")
+
+    step_fn = jax.jit(make_train_step(model, optimizer, microbatches=microbatches))
+    monitor = StragglerMonitor()
+    failure = failure or FailureInjector()
+
+    step = start_step
+    for step in range(start_step, steps):
+        batch = next(batches)
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        t0 = time.perf_counter()
+        failure.check(step)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        loss = float(metrics["loss"])
+        dt = time.perf_counter() - t0
+        if monitor.observe(step, dt):
+            res.straggler_steps.append(step)
+            log(f"[fit] straggler at step {step}: {dt:.3f}s vs ewma {monitor.ewma:.3f}s")
+        res.losses.append(loss)
+        res.steps_run += 1
+        if log_every and step % log_every == 0:
+            log(f"[fit] step {step} loss {loss:.4f} ({dt*1e3:.0f} ms)")
+        if ckpt is not None and (step + 1) % ckpt_every == 0:
+            ckpt.save(step + 1, (params, opt_state))
+    if ckpt is not None:
+        ckpt.save(steps, (params, opt_state))
+        ckpt.wait()
+    res.final_step = steps
+    res.params = params  # type: ignore[attr-defined]
+    return res
+
+
+def fit_with_restarts(
+    make_loop_args: Callable[[], Dict[str, Any]],
+    *,
+    max_restarts: int = 3,
+    log: Callable[[str], None] = print,
+) -> FitResult:
+    """Supervisor: restart `fit` after (injected or real) failures — the
+    single-process stand-in for the cluster coordinator."""
+    attempt = 0
+    while True:
+        try:
+            return fit(**make_loop_args())
+        except InjectedFailure as e:
+            attempt += 1
+            log(f"[supervisor] {e}; restart {attempt}/{max_restarts}")
+            if attempt > max_restarts:
+                raise

@@ -1,0 +1,71 @@
+"""train_step builder: loss → grads → optimizer, with optional microbatching."""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.registry import Model
+from repro.train.optimizer import AdamW
+
+
+def make_train_step(
+    model: Model,
+    optimizer: AdamW,
+    *,
+    microbatches: int = 1,
+) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, state, metrics).
+
+    ``microbatches > 1`` splits the batch and accumulates grads sequentially
+    (lax.scan) — activation memory drops by the factor, FLOPs unchanged.
+    """
+
+    def loss_fn(params, batch):
+        # mixed precision: cast fp32 master params to bf16 ONCE at step entry
+        # (§Perf iteration 3) — the whole backward then runs in bf16, halving
+        # the per-layer dgrad all-reduces and weight reads; grads come back
+        # fp32 through the cast's transpose, feeding the fp32 optimizer.
+        compute_params = jax.tree_util.tree_map(
+            lambda p: p.astype(jnp.bfloat16)
+            if p.dtype == jnp.float32 and p.ndim >= 2
+            else p,
+            params,
+        )
+        return model.loss(compute_params, batch)
+
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    def train_step(params, opt_state, batch):
+        if microbatches <= 1:
+            loss, grads = grad_fn(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                assert b % microbatches == 0, (b, microbatches)
+                return x.reshape((microbatches, b // microbatches) + x.shape[1:])
+
+            mb = jax.tree_util.tree_map(split, batch)
+            zero = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+
+            def body(acc, mbatch):
+                tot_loss, tot_g = acc
+                l, g = grad_fn(params, mbatch)
+                tot_g = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), tot_g, g
+                )
+                return (tot_loss + l, tot_g), None
+
+            (loss, grads), _ = jax.lax.scan(body, (jnp.zeros(()), zero), mb)
+            loss = loss / microbatches
+            grads = jax.tree_util.tree_map(lambda g: g / microbatches, grads)
+        new_params, new_state, opt_metrics = optimizer.update(params, grads, opt_state)
+        metrics = {"loss": loss, **opt_metrics}
+        return new_params, new_state, metrics
+
+    return train_step

@@ -1,0 +1,46 @@
+"""Shared builders for workflow-version tests."""
+import numpy as np
+
+from repro.core import dag as D
+from repro.core.dag import DataflowDAG, Link, Operator
+from repro.core.predicates import LinExpr, Pred
+from repro.engine.table import Table
+
+SCHEMA = ("a", "b", "c")
+
+
+def chain(*ops, schema=SCHEMA, src="src", sink_sem=D.BAG):
+    """Linear workflow: Source -> ops... -> Sink."""
+    all_ops = [Operator.make(src, D.SOURCE, schema=schema)]
+    links = []
+    prev = src
+    for op in ops:
+        all_ops.append(op)
+        links.append(Link(prev, op.id))
+        prev = op.id
+    all_ops.append(Operator.make("sink", D.SINK, semantics=sink_sem))
+    links.append(Link(prev, "sink"))
+    return DataflowDAG(all_ops, links)
+
+
+def f(id, col, op, val):
+    return Operator.make(id, D.FILTER, pred=Pred.cmp(col, op, val))
+
+
+def proj_identity(id, schema=SCHEMA):
+    return Operator.make(id, D.PROJECT, cols=tuple((c, c) for c in schema))
+
+
+def rand_table(rng, n=60, schema=SCHEMA, lo=-3, hi=8):
+    """Dense coverage: all integers in [lo,hi) plus half-integer offsets, so
+    strict-vs-nonstrict and off-grid rational differences are witnessed."""
+    cols = {}
+    for c in schema:
+        base = np.arange(lo, hi, dtype=np.float64)
+        vals = np.concatenate(
+            [base, base + 0.5,
+             rng.integers(lo, hi, max(0, n - 2 * len(base))).astype(np.float64)]
+        )
+        rng.shuffle(vals)
+        cols[c] = vals[:n]
+    return Table(cols, list(schema))

@@ -1,0 +1,136 @@
+"""DAG model, edits/diff, and engine operator semantics."""
+
+import numpy as np
+import pytest
+
+from helpers import SCHEMA, chain, f, proj_identity, rand_table
+from repro.core import dag as D
+from repro.core.dag import DataflowDAG, Link, Operator, infer_schema
+from repro.core.edits import (
+    AddOperator,
+    DeleteOperator,
+    ModifyOperator,
+    AddLink,
+    RemoveLink,
+    apply_transformation,
+    diff,
+    identity_mapping,
+)
+from repro.core.predicates import Pred
+from repro.engine import Table, execute, tables_equal
+
+
+def test_topo_and_validate():
+    w = chain(f("f1", "a", ">", 2), proj_identity("p1"))
+    w.validate()
+    order = w.topo_order()
+    assert order.index("src") < order.index("f1") < order.index("p1")
+
+
+def test_cycle_detection():
+    ops = [
+        Operator.make("s", D.SOURCE, schema=SCHEMA),
+        f("f1", "a", ">", 0),
+        f("f2", "a", ">", 1),
+    ]
+    with pytest.raises(D.DAGError):
+        DataflowDAG(ops, [Link("s", "f1"), Link("f1", "f2"), Link("f2", "f1")]).topo_order()
+
+
+def test_diff_roundtrip():
+    P = chain(f("f1", "a", ">", 2), proj_identity("p1"))
+    edits = [
+        AddOperator(f("g", "b", "<", 5)),
+        RemoveLink(Link("f1", "p1")),
+        AddLink(Link("f1", "g")),
+        AddLink(Link("g", "p1")),
+    ]
+    Q = apply_transformation(P, edits)
+    derived = diff(P, Q)
+    Q2 = apply_transformation(P, derived)
+    assert Q2.signature() == Q.signature()
+
+
+def test_infer_schema():
+    w = chain(
+        Operator.make("agg", D.AGGREGATE, group_by=("a",), aggs=(("sum", "b", "total"),)),
+    )
+    sch = infer_schema(w, {})
+    assert sch["agg"] == ["a", "total"]
+    assert sch["sink"] == ["a", "total"]
+
+
+def test_engine_filter_project_join_agg():
+    left = Table({"a": np.array([1.0, 2, 3]), "b": np.array([10.0, 20, 30]), "c": np.array([0.0, 0, 0])})
+    right = Table({"k": np.array([2.0, 3, 4]), "v": np.array([200.0, 300, 400])})
+    w = DataflowDAG(
+        [
+            Operator.make("l", D.SOURCE, schema=("a", "b", "c")),
+            Operator.make("r", D.SOURCE, schema=("k", "v")),
+            Operator.make("j", D.JOIN, on=(("a", "k"),), how="inner"),
+            Operator.make("sink", D.SINK, semantics=D.BAG),
+        ],
+        [Link("l", "j", 0), Link("r", "j", 1), Link("j", "sink")],
+    )
+    out = execute(w, {"l": left, "r": right})["sink"]
+    assert out.rows() == [(2.0, 20.0, 0.0, 2.0, 200.0), (3.0, 30.0, 0.0, 3.0, 300.0)]
+
+    # left outer join pads with NaN
+    w2 = DataflowDAG(
+        [
+            Operator.make("l", D.SOURCE, schema=("a", "b", "c")),
+            Operator.make("r", D.SOURCE, schema=("k", "v")),
+            Operator.make("j", D.JOIN, on=(("a", "k"),), how="left_outer"),
+            Operator.make("sink", D.SINK, semantics=D.BAG),
+        ],
+        [Link("l", "j", 0), Link("r", "j", 1), Link("j", "sink")],
+    )
+    out2 = execute(w2, {"l": left, "r": right})["sink"]
+    assert len(out2) == 3
+
+
+def test_engine_aggregate_and_sort():
+    t = Table({"a": np.array([1.0, 1, 2]), "b": np.array([5.0, 7, 9]), "c": np.zeros(3)})
+    w = chain(
+        Operator.make("agg", D.AGGREGATE, group_by=("a",), aggs=(("sum", "b", "s"), ("count", "*", "n"))),
+        Operator.make("sort", D.SORT, keys=(("s", True),)),
+    )
+    out = execute(w, {"src": t})["sink"]
+    assert out.rows() == [(2.0, 9.0, 1.0), (1.0, 12.0, 2.0)]
+
+
+def test_engine_determinism():
+    rng = np.random.default_rng(0)
+    t = rand_table(rng)
+    w = chain(
+        f("f1", "a", ">", 2),
+        Operator.make("cl", D.CLASSIFIER, col="b", out="label", model="m1", classes=4),
+        Operator.make("agg", D.AGGREGATE, group_by=("label",), aggs=(("count", "*", "n"),)),
+    )
+    r1 = execute(w, {"src": t})["sink"]
+    r2 = execute(w, {"src": t})["sink"]
+    assert tables_equal(r1, r2, D.ORDERED)
+
+
+def test_union_replicate_unnest():
+    t = Table({"a": np.array([1.0, 2]), "b": np.array([3.0, 4]), "c": np.zeros(2)})
+    w = DataflowDAG(
+        [
+            Operator.make("s", D.SOURCE, schema=SCHEMA),
+            Operator.make("rep", D.REPLICATE),
+            f("f1", "a", ">", 1),
+            f("f2", "a", "<=", 1),
+            Operator.make("u", D.UNION),
+            Operator.make("sink", D.SINK, semantics=D.BAG),
+        ],
+        [
+            Link("s", "rep"),
+            Link("rep", "f1"),
+            Link("rep", "f2"),
+            Link("f1", "u", 0),
+            Link("f2", "u", 1),
+            Link("u", "sink"),
+        ],
+    )
+    out = execute(w, {"s": t})["sink"]
+    assert sorted(r[0] for r in out.rows()) == [1.0, 2.0]

@@ -1,0 +1,109 @@
+"""Pallas kernels vs pure-jnp oracles (interpret=True), shape/dtype sweeps."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.rmsnorm import rmsnorm_pallas
+from repro.kernels.ssd_scan import ssd_pallas
+
+RNG = np.random.default_rng(42)
+
+
+def _mk_qkv(B, S, H, KV, D, dtype):
+    q = jnp.asarray(RNG.standard_normal((B, S, H, D)), dtype) * 0.5
+    k = jnp.asarray(RNG.standard_normal((B, S, KV, D)), dtype) * 0.5
+    v = jnp.asarray(RNG.standard_normal((B, S, KV, D)), dtype) * 0.5
+    return q, k, v
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-6), (jnp.bfloat16, 2e-2)])
+@pytest.mark.parametrize(
+    "B,S,H,KV,D,qb,kb",
+    [
+        (1, 128, 4, 4, 32, 64, 64),    # MHA
+        (2, 256, 8, 2, 16, 64, 128),   # GQA 4:1, rectangular blocks
+        (1, 192, 4, 1, 64, 64, 64),    # MQA, non-divisible seq (padding)
+    ],
+)
+def test_flash_kernel_shapes_dtypes(B, S, H, KV, D, qb, kb, dtype, tol):
+    q, k, v = _mk_qkv(B, S, H, KV, D, dtype)
+    want = ref.attention_reference(q, k, v, causal=True)
+    got = flash_attention_pallas(q, k, v, causal=True, q_block=qb, kv_block=kb, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=tol, rtol=tol
+    )
+
+
+@pytest.mark.parametrize("variant", ["window", "chunk", "bidir"])
+def test_flash_kernel_mask_variants(variant):
+    q, k, v = _mk_qkv(2, 256, 4, 2, 32, jnp.float32)
+    kw = {
+        "window": dict(causal=True, window=96),
+        "chunk": dict(causal=True, chunk=64),
+        "bidir": dict(causal=False),
+    }[variant]
+    want = ref.attention_reference(q, k, v, **kw)
+    got = flash_attention_pallas(q, k, v, q_block=64, kv_block=64, interpret=True, **kw)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-6, rtol=2e-6)
+
+
+def test_flash_jnp_matches_kernel_and_grads_finite():
+    q, k, v = _mk_qkv(1, 128, 4, 2, 32, jnp.float32)
+    o_jnp = ref.flash_attention_jnp(q, k, v, causal=True, q_block=32, kv_block=32)
+    o_pal = flash_attention_pallas(q, k, v, causal=True, q_block=32, kv_block=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(o_jnp), np.asarray(o_pal), atol=2e-6, rtol=2e-6)
+    g = jax.grad(lambda a: (ref.flash_attention_jnp(a, k, v, q_block=32, kv_block=32) ** 2).sum())(q)
+    assert np.isfinite(np.asarray(g)).all()
+
+
+@pytest.mark.parametrize(
+    "B,L,H,P,G,N,chunk",
+    [(1, 64, 2, 8, 1, 16, 16), (2, 128, 4, 16, 2, 32, 32), (1, 96, 8, 8, 4, 8, 32)],
+)
+def test_ssd_kernel_shapes(B, L, H, P, G, N, chunk):
+    x = jnp.asarray(RNG.standard_normal((B, L, H, P)), jnp.float32) * 0.5
+    dt = jax.nn.softplus(jnp.asarray(RNG.standard_normal((B, L, H)), jnp.float32))
+    A = -jnp.exp(jnp.asarray(RNG.standard_normal((H,)), jnp.float32) * 0.3)
+    Bm = jnp.asarray(RNG.standard_normal((B, L, G, N)), jnp.float32) * 0.3
+    Cm = jnp.asarray(RNG.standard_normal((B, L, G, N)), jnp.float32) * 0.3
+    y1, s1 = ref.ssd_reference(x, dt, A, Bm, Cm, chunk=chunk)
+    y2, s2 = ssd_pallas(x, dt, A, Bm, Cm, chunk=chunk, interpret=True)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=1e-5, rtol=1e-5)
+
+
+def test_ssd_matches_sequential_decode():
+    B, L, H, P, G, N = 1, 32, 2, 4, 1, 8
+    x = jnp.asarray(RNG.standard_normal((B, L, H, P)), jnp.float32) * 0.5
+    dt = jax.nn.softplus(jnp.asarray(RNG.standard_normal((B, L, H)), jnp.float32))
+    A = -jnp.exp(jnp.asarray(RNG.standard_normal((H,)), jnp.float32) * 0.3)
+    Bm = jnp.asarray(RNG.standard_normal((B, L, G, N)), jnp.float32) * 0.3
+    Cm = jnp.asarray(RNG.standard_normal((B, L, G, N)), jnp.float32) * 0.3
+    y, st_final = ref.ssd_reference(x, dt, A, Bm, Cm, chunk=8)
+    st = jnp.zeros((B, H, P, N))
+    for t in range(L):
+        yt, st = ref.ssd_decode_step(st, x[:, t], dt[:, t], A, Bm[:, t], Cm[:, t])
+        np.testing.assert_allclose(np.asarray(yt), np.asarray(y[:, t]), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(st_final), atol=1e-4)
+
+
+@pytest.mark.parametrize("shape", [(8, 64), (3, 5, 128), (17, 256)])
+def test_rmsnorm_kernel(shape):
+    x = jnp.asarray(RNG.standard_normal(shape), jnp.float32)
+    w = jnp.asarray(RNG.standard_normal(shape[-1:]), jnp.float32)
+    want = ref.rmsnorm_reference(x, w)
+    got = rmsnorm_pallas(x, w, interpret=True, rows_block=8)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6, rtol=1e-6)
+
+
+def test_decode_attention_matches_full():
+    B, S, H, KV, D = 2, 64, 4, 2, 16
+    q, k, v = _mk_qkv(B, S, H, KV, D, jnp.float32)
+    pos = 40
+    full = ref.attention_reference(q[:, pos : pos + 1], k, v, causal=True, q_offset=pos)
+    dec = ref.decode_attention_reference(q[:, pos], k, v, jnp.asarray(pos))
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full[:, 0]), atol=1e-5)
