@@ -1,0 +1,121 @@
+"""Chain-verification benchmark: EV calls and wall-clock along a version chain.
+
+Verifies every consecutive pair of a synthetic iterative-analytics chain
+(``repro.service.synthetic.make_chain``) two ways:
+
+  * **no-cache** — a fresh Veer⁺ per pair (the paper's per-pair setting);
+  * **chained**  — one ``VersionChainSession`` whose verdict cache memoizes
+    window verdicts across pairs, plus a **warm** second session restored
+    from the persisted cache file (the cross-session story).
+
+The point of the table: pair *k* gets cheaper than pair 1 once the cache has
+seen its windows — most pairs drop to zero EV calls.
+
+    PYTHONPATH=src python benchmarks/chain_bench.py [--smoke] [--versions N]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import tempfile
+import time
+
+sys.path.insert(0, "src")
+
+from repro.core.ev import default_evs
+from repro.core.verifier import make_veer_plus
+from repro.service import VersionChainSession
+from repro.service.synthetic import make_chain
+
+
+def run(n_versions: int = 12, use_jaxpr: bool = False):
+    """Returns (baseline_rows, cached_report, warm_report); rows are dicts."""
+    evs = default_evs(include_jaxpr=use_jaxpr)
+    chain = make_chain(n_versions)
+
+    baseline = []
+    for k, (a, b) in enumerate(zip(chain, chain[1:]), start=1):
+        veer = make_veer_plus(list(evs))
+        t0 = time.perf_counter()
+        verdict, stats = veer.verify(a, b)
+        baseline.append(
+            {
+                "pair": k,
+                "verdict": verdict,
+                "ev_calls": stats.ev_calls,
+                "wall": time.perf_counter() - t0,
+            }
+        )
+
+    with tempfile.NamedTemporaryFile(suffix=".json", delete=False) as f:
+        cache_path = f.name
+    session = VersionChainSession(list(evs), cache_path=cache_path)
+    for v in chain:
+        session.submit(v)
+    session.save()
+    cached = session.report()
+
+    # cross-session warm start: a new session reloads the persisted verdicts
+    warm_session = VersionChainSession(list(evs), cache_path=cache_path)
+    for v in chain:
+        warm_session.submit(v)
+    warm = warm_session.report()
+
+    return baseline, cached, warm
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true", help="short chain for CI")
+    ap.add_argument("--versions", type=int, default=None)
+    ap.add_argument(
+        "--jaxpr", action="store_true", help="include the JaxprEV in the roster"
+    )
+    args = ap.parse_args(argv)
+    if args.versions is not None and args.versions < 2:
+        ap.error("--versions must be at least 2 (a chain needs two versions)")
+    n = args.versions or (6 if args.smoke else 12)
+
+    baseline, cached, warm = run(n, use_jaxpr=args.jaxpr)
+
+    print(f"== chain of {n} versions ({n - 1} pairs) ==")
+    print("pair  no-cache(ev,ms)    chained(ev,hits,ms)   warm(ev,hits,ms)")
+    for b, c, w in zip(baseline, cached.pairs, warm.pairs):
+        print(
+            f"{b['pair']:>4}  "
+            f"{b['ev_calls']:>4} {b['wall'] * 1e3:8.1f}    "
+            f"{c.ev_calls:>4} {c.cache_hits:>5} {c.wall_time * 1e3:8.1f}   "
+            f"{w.ev_calls:>4} {w.cache_hits:>5} {w.wall_time * 1e3:8.1f}"
+        )
+    base_calls = sum(b["ev_calls"] for b in baseline)
+    base_wall = sum(b["wall"] for b in baseline)
+    print(
+        f"totals: no-cache {base_calls} EV calls / {base_wall * 1e3:.1f} ms ; "
+        f"chained {cached.total_ev_calls} EV calls "
+        f"({cached.total_cache_hits} hits) / "
+        f"{cached.total_wall_time * 1e3:.1f} ms ; "
+        f"warm {warm.total_ev_calls} EV calls "
+        f"({warm.total_cache_hits} hits) / {warm.total_wall_time * 1e3:.1f} ms"
+    )
+    saved_pct = 100.0 * (1 - cached.total_ev_calls / max(1, base_calls))
+    # scaffold CSV contract (see benchmarks/run.py)
+    print(
+        f"chain_bench,{base_wall * 1e6 / max(1, len(baseline)):.1f},"
+        f"ev_calls_saved={saved_pct:.0f}%_warm={warm.total_ev_calls}"
+    )
+
+    ok = (
+        all(v is True for v in cached.verdicts)
+        and all(p.cache_hits > 0 for p in cached.pairs[1:])
+        and cached.total_ev_calls < base_calls
+        and warm.total_ev_calls == 0
+    )
+    if not ok:
+        print("FAILED: caching did not deliver the expected savings")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -5,10 +5,10 @@ from __future__ import annotations
 import time
 from typing import Dict, List, Optional
 
-from repro.core.ev import EquitasEV, JaxprEV, SpesEV, UDPEV
+from repro.core.ev import EquitasEV, JaxprEV, SpesEV, UDPEV, default_evs
 from repro.core.verifier import Veer, make_veer_plus
 
-DEFAULT_EVS = lambda: [EquitasEV(), SpesEV(), UDPEV(), JaxprEV()]
+DEFAULT_EVS = default_evs  # canonical roster lives in repro.core.ev
 PAPER_EVS = lambda: [EquitasEV()]  # the paper's experiments used Equitas
 
 

@@ -1,0 +1,45 @@
+"""Chain verification with memoized EV verdicts (service layer).
+
+An analyst session: ten versions of a multi-branch analytics dataflow, each
+1-2 edits apart.  The ``VersionChainSession`` verifies every consecutive
+pair; its verdict cache makes pair k cheaper than pair 1, and a second
+session restored from the persisted cache file verifies the whole chain
+without a single EV call.
+
+    PYTHONPATH=src python examples/chain_session.py
+"""
+
+import sys
+import tempfile
+
+sys.path.insert(0, "src")
+
+from repro.core.ev import EquitasEV, SpesEV, UDPEV
+from repro.service import VersionChainSession
+from repro.service.synthetic import make_chain
+
+
+def main():
+    cache_path = tempfile.mktemp(suffix=".json", prefix="veer_verdicts_")
+    versions = make_chain(10)
+
+    print("-- session 1 (cold cache) --")
+    with VersionChainSession(
+        [EquitasEV(), SpesEV(), UDPEV()], cache_path=cache_path
+    ) as session:
+        for v in versions:
+            session.submit(v)
+        print(session.report().summary())
+
+    print("\n-- session 2 (warm: verdicts restored from disk) --")
+    session2 = VersionChainSession(
+        [EquitasEV(), SpesEV(), UDPEV()], cache_path=cache_path
+    )
+    for v in versions:
+        session2.submit(v)
+    print(session2.report().summary())
+    assert session2.report().total_ev_calls == 0
+
+
+if __name__ == "__main__":
+    main()

@@ -1,13 +1,29 @@
 from repro.core.ev.base import BaseEV, EVCallCounter, QueryPair, Restriction
+from repro.core.ev.cache import CachedEV, CacheEntry, VerdictCache, wrap_evs
 from repro.core.ev.equitas import EquitasEV
 from repro.core.ev.spes import SpesEV, UDPEV
 from repro.core.ev.jaxpr_ev import JaxprEV
 
+
+def default_evs(include_jaxpr: bool = True):
+    """The canonical EV roster (paper §8 multi-EV setup + the JAX-native
+    EV).  Single source of truth for benchmarks and the service layer."""
+    evs = [EquitasEV(), SpesEV(), UDPEV()]
+    if include_jaxpr:
+        evs.append(JaxprEV())
+    return evs
+
+
 __all__ = [
+    "default_evs",
     "BaseEV",
     "EVCallCounter",
     "QueryPair",
     "Restriction",
+    "CachedEV",
+    "CacheEntry",
+    "VerdictCache",
+    "wrap_evs",
     "EquitasEV",
     "SpesEV",
     "UDPEV",

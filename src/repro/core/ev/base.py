@@ -14,10 +14,11 @@ can decide (Def 4.2/4.3) — plus two capability bits the verifier relies on:
 
 from __future__ import annotations
 
+import hashlib
 from dataclasses import dataclass, field
 from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
 
-from repro.core.dag import BAG, ORDERED, SET, DataflowDAG
+from repro.core.dag import BAG, ORDERED, SET, SOURCE, DataflowDAG
 
 
 @dataclass(frozen=True)
@@ -43,6 +44,91 @@ class QueryPair:
             self.semantics,
             self.at_version_sink,
         )
+
+    def fingerprint(self) -> str:
+        """Content-addressed canonical key, invariant under operator renames.
+
+        ``key()`` above is id-sensitive: the same rewrite applied to a renamed
+        copy of a workflow (or re-encountered in a later version pair, where
+        ids drifted) produces a different key.  ``fingerprint()`` erases ids —
+        operators are named by their position in a canonical traversal, and
+        source operators by a token assigned on first appearance that is
+        *shared across the two sides* (same source id on both sides ⇒ same
+        token, which is exactly the pairing EV verdicts depend on).  Two
+        query pairs with equal fingerprints are isomorphic as pairs, so every
+        (deterministic, id-invariant) EV returns the same verdict on both —
+        the soundness condition for the cross-version verdict cache.
+
+        Canonicalization: each sink pair serializes both sub-DAG cones in
+        consumer-port order, with internal sharing captured by back-references
+        (``("ref", i)``); sink pairs are ordered by an id-free local
+        serialization first, so the global source-token assignment does not
+        depend on the incoming ``sink_pairs`` order.
+        """
+        cached = self.__dict__.get("_fingerprint")
+        if cached is not None:
+            return cached
+        pairs = []
+        for ps, qs in self.sink_pairs:
+            tokens: Dict[str, int] = {}
+            local: List[Tuple] = []
+            _canon_cone(self.P, ps, tokens, {}, local)
+            local.append(("side",))
+            _canon_cone(self.Q, qs, tokens, {}, local)
+            pairs.append((repr(local), ps, qs))
+        pairs.sort(key=lambda x: x[0])
+        tokens = {}
+        ix_p: Dict[str, int] = {}
+        ix_q: Dict[str, int] = {}
+        stream: List[Tuple] = []
+        for _, ps, qs in pairs:
+            stream.append(("sink",))
+            _canon_cone(self.P, ps, tokens, ix_p, stream)
+            stream.append(("side",))
+            _canon_cone(self.Q, qs, tokens, ix_q, stream)
+        blob = repr((self.semantics, self.at_version_sink, stream))
+        digest = hashlib.sha256(blob.encode()).hexdigest()[:32]
+        object.__setattr__(self, "_fingerprint", digest)  # frozen-safe memo
+        return digest
+
+
+def _canon_cone(
+    dag: DataflowDAG,
+    root: str,
+    source_tokens: Dict[str, int],
+    node_ix: Dict[str, int],
+    out: List[Tuple],
+) -> None:
+    """Append an id-free serialization of the cone feeding ``root`` to ``out``.
+
+    The stream is flat (balanced ``begin``/``end`` markers instead of nested
+    tuples) and the traversal iterative, so arbitrarily deep pipelines neither
+    overflow the interpreter stack nor break ``repr``.  Non-source operators
+    are indexed in post-order of first completion; revisits (fan-out sharing)
+    serialize as ``("ref", index)``.  Sources serialize as
+    ``("src", token, signature)`` where the token dict is shared between the
+    P and Q sides of a pair (ids coincide there by construction), making the
+    cross-side source correspondence part of the canonical form.
+    """
+    stack: List[Tuple[str, str]] = [("visit", root)]
+    while stack:
+        action, op_id = stack.pop()
+        if action == "end":
+            node_ix[op_id] = len(node_ix)
+            out.append(("end",))
+            continue
+        op = dag.ops[op_id]
+        if op.op_type == SOURCE:
+            tok = source_tokens.setdefault(op_id, len(source_tokens))
+            out.append(("src", tok, op.signature()))
+            continue
+        if op_id in node_ix:
+            out.append(("ref", node_ix[op_id]))
+            continue
+        out.append(("begin", op.signature()))
+        stack.append(("end", op_id))
+        for l in reversed(dag.in_links.get(op_id, ())):
+            stack.append(("visit", l.src))
 
 
 @dataclass(frozen=True)

@@ -1,0 +1,208 @@
+"""EV-verdict memoization keyed by canonical QueryPair fingerprints.
+
+The cost model of iterative analytics (paper §1, GEqO/EqDAC follow-ups) is
+that EV calls dominate: a chain of versions re-poses the *same* window-level
+equivalence questions over and over — inside one pair (isomorphic windows of
+different decompositions), across consecutive pairs (an unchanged region next
+to last week's edit), and across sessions (the cache is a small JSON file).
+
+``VerdictCache`` is the store: ``(ev name, QueryPair.fingerprint())`` →
+``(verdict, original check time)``.  Soundness rests on two facts:
+
+  * ``fingerprint()`` equality implies the two query pairs are isomorphic
+    *as pairs* (including the cross-side source correspondence), and
+  * every EV here is deterministic and id-invariant (verdicts depend only on
+    the pair's structure), so replaying a verdict — True, False, **or**
+    Unknown — is exactly what re-running the EV would produce.
+
+Unknown verdicts are cached per-EV, not per-EV-set: adding an EV to the
+roster changes which window verdicts aggregate to True, but never which
+verdict an individual EV returns, so per-EV entries stay valid.
+
+``CachedEV`` is the wrapper the verifier sees: a drop-in ``BaseEV`` facade
+(attribute access proxies to the wrapped EV) whose ``check`` consults the
+cache first and records hit/miss/time-saved statistics.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+from dataclasses import dataclass
+from typing import Dict, Iterable, Optional, Tuple
+
+from repro.core.ev.base import BaseEV, QueryPair
+
+# bump when an EV's decision procedure changes incompatibly: old persisted
+# verdicts are discarded instead of replayed
+CACHE_FORMAT_VERSION = 1
+
+_VERDICT_TO_JSON = {True: "T", False: "F", None: "U"}
+_VERDICT_FROM_JSON = {v: k for k, v in _VERDICT_TO_JSON.items()}
+
+
+@dataclass(frozen=True)
+class CacheEntry:
+    verdict: Optional[bool]
+    elapsed: float  # seconds the original EV check took
+
+
+class VerdictCache:
+    """Persistable map ``(ev_name, fingerprint) -> CacheEntry``.
+
+    With a ``path`` the cache loads eagerly and ``save()`` writes a compact
+    JSON file — drop it next to ``ReuseManager``'s content-addressed store to
+    share one directory of reusable artifacts (materializations + verdicts).
+    """
+
+    def __init__(self, path: Optional[str] = None, *, autoload: bool = True):
+        self.path = pathlib.Path(path).expanduser() if path is not None else None
+        self._entries: Dict[Tuple[str, str], CacheEntry] = {}
+        self._dirty = False
+        self.hits = 0
+        self.misses = 0
+        self.time_saved = 0.0
+        if self.path is not None and autoload and self.path.exists():
+            self.load()
+
+    # -- core map ------------------------------------------------------------
+    def get(self, ev_name: str, fingerprint: str) -> Optional[CacheEntry]:
+        entry = self._entries.get((ev_name, fingerprint))
+        if entry is None:
+            self.misses += 1
+            return None
+        self.hits += 1
+        self.time_saved += entry.elapsed
+        return entry
+
+    def put(
+        self,
+        ev_name: str,
+        fingerprint: str,
+        verdict: Optional[bool],
+        elapsed: float,
+    ) -> None:
+        key = (ev_name, fingerprint)
+        entry = CacheEntry(verdict, elapsed)
+        if self._entries.get(key) != entry:
+            self._entries[key] = entry
+            self._dirty = True
+
+    def covers(self, ev_names: Iterable[str], fingerprint: str) -> bool:
+        """True iff every named EV's verdict for this pair is memoized —
+        i.e. the window can be fully resolved without any EV call."""
+        return all((n, fingerprint) in self._entries for n in ev_names)
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key: Tuple[str, str]) -> bool:
+        return key in self._entries
+
+    # -- persistence -----------------------------------------------------------
+    def save(self, path: Optional[str] = None) -> None:
+        target = pathlib.Path(path).expanduser() if path is not None else self.path
+        if target is None:
+            return
+        if target == self.path and not self._dirty:
+            return  # nothing new since the last write: skip the I/O
+        payload = {
+            "version": CACHE_FORMAT_VERSION,
+            "entries": [
+                [ev, fp, _VERDICT_TO_JSON[e.verdict], round(e.elapsed, 6)]
+                for (ev, fp), e in sorted(self._entries.items())
+            ],
+        }
+        target.parent.mkdir(parents=True, exist_ok=True)
+        target.write_text(json.dumps(payload))
+        if target == self.path:
+            self._dirty = False
+
+    def load(self, path: Optional[str] = None) -> int:
+        """Merge entries from disk; returns how many were loaded."""
+        target = pathlib.Path(path).expanduser() if path is not None else self.path
+        if target is None or not target.exists():
+            return 0
+        try:
+            payload = json.loads(target.read_text())
+        except (json.JSONDecodeError, OSError):
+            return 0  # empty/corrupt cache file: start cold, don't crash
+        if not isinstance(payload, dict) or payload.get("version") != CACHE_FORMAT_VERSION:
+            return 0  # incompatible format: start fresh
+        n = 0
+        try:
+            for ev, fp, verdict, elapsed in payload["entries"]:
+                self._entries[(ev, fp)] = CacheEntry(
+                    _VERDICT_FROM_JSON[verdict], float(elapsed)
+                )
+                n += 1
+        except (KeyError, TypeError, ValueError):
+            pass  # malformed row: keep what parsed, start cold for the rest
+        if n and target != self.path:
+            self._dirty = True  # merged foreign entries not yet on self.path
+        return n
+
+    def stats(self) -> Dict[str, object]:
+        return {
+            "entries": len(self._entries),
+            "hits": self.hits,
+            "misses": self.misses,
+            "time_saved": self.time_saved,
+        }
+
+
+class CachedEV:
+    """Memoizing facade over a ``BaseEV``.
+
+    ``check`` consults the shared ``VerdictCache`` under this EV's name and
+    the query pair's canonical fingerprint; on a miss it runs the wrapped EV
+    and records the verdict with its cost, so future hits know how much time
+    they saved.  ``validate`` is not cached — restriction checks are pure
+    Python over tiny DAGs and are not the EV-call cost the paper measures.
+    """
+
+    def __init__(self, ev: BaseEV, cache: VerdictCache):
+        self.ev = ev
+        self.cache = cache
+        self.hits = 0
+        self.misses = 0
+        self.time_saved = 0.0
+
+    def __getattr__(self, item):
+        return getattr(self.ev, item)
+
+    def __repr__(self) -> str:
+        return f"CachedEV({self.ev.name})"
+
+    def validate(self, qp: QueryPair) -> bool:
+        return self.ev.validate(qp)
+
+    def check(self, qp: QueryPair) -> Optional[bool]:
+        fp = qp.fingerprint()
+        entry = self.cache.get(self.ev.name, fp)
+        if entry is not None:
+            self.hits += 1
+            self.time_saved += entry.elapsed
+            return entry.verdict
+        self.misses += 1
+        t0 = time.perf_counter()
+        verdict = self.ev.check(qp)
+        self.cache.put(self.ev.name, fp, verdict, time.perf_counter() - t0)
+        return verdict
+
+
+def wrap_evs(evs, cache: Optional[VerdictCache]):
+    """Wrap each EV in ``CachedEV`` bound to ``cache`` (idempotent; no-op
+    without a cache).  An EV already wrapped around a *different* cache is
+    re-bound, so attaching a new cache never leaves stale wrappers feeding
+    the old store."""
+    if cache is None:
+        return list(evs)
+    out = []
+    for ev in evs:
+        if isinstance(ev, CachedEV):
+            out.append(ev if ev.cache is cache else CachedEV(ev.ev, cache))
+        else:
+            out.append(CachedEV(ev, cache))
+    return out

@@ -11,6 +11,21 @@ inequivalence-capable (False from Equitas means "could not verify", §4.4), so
 Restriction-monotonicity: Equitas is NOT monotonic (paper Example 1) — the
 counting restrictions R4/R5 can be violated by a window yet satisfied by a
 larger window that balances the counts.
+
+Supported fragment (format shared by all EVs; see docs/ARCHITECTURE.md):
+
+    ============== ==========================================================
+    EV             EquitasEV (``equitas``)
+    Operators      Source, Filter, Project, Join(inner/left_outer),
+                   Aggregate, Replicate, Sink
+    Semantics      set, bag (decision procedure proves bag-level equality)
+    Restrictions   R1 set semantics (bag sound here too); R2 ops in
+                   {SPJ, OuterJoin, Aggregate}; R3 predicates linear;
+                   R4/R5 equal OuterJoin/Aggregate counts; R6
+                   cardinality-dependent aggregates scan inputs once
+    Monotonic      no — R4/R5 counting can recover in a larger window
+    Proves inequiv no — False means "could not verify" (§4.4)
+    ============== ==========================================================
 """
 
 from __future__ import annotations

@@ -16,6 +16,21 @@ pipeline.
 Restrictions: every operator traceable (see ``jax_bodies.TRACEABLE_OPS``),
 numeric predicates only.  Restriction-monotonic: adding an untraceable op to
 any window keeps it invalid.
+
+Supported fragment (format shared by all EVs; see docs/ARCHITECTURE.md):
+
+    ============== ==========================================================
+    EV             JaxprEV (``jaxpr``)
+    Operators      every op with a registered JAX body
+                   (``jax_bodies.TRACEABLE_OPS`` — relational core + UDF /
+                   Classifier / DictionaryMatcher / Sentiment with numeric
+                   models)
+    Semantics      set, bag, ordered
+    Restrictions   J1 all operators have registered JAX bodies; J2 numeric
+                   columns / predicates only
+    Monotonic      yes
+    Proves inequiv no — syntactic jaxpr comparison, True or Unknown only
+    ============== ==========================================================
 """
 
 from __future__ import annotations

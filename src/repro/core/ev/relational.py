@@ -18,6 +18,20 @@ compare structurally with recursive block equivalence.  Canonicalization
 includes the classic pushdowns so versions differing by
 filter-past-{join,aggregate,outer-join} / project-past-filter / empty-project
 rewrites reach the same form.
+
+Supported fragment (format shared by all EVs; see docs/ARCHITECTURE.md —
+this module is the decision procedure *behind* Equitas/Spes/UDP, so its
+fragment is their union):
+
+    ============== ==========================================================
+    Module         relational (normalizer + block equivalence)
+    Operators      Source, Filter, Project, Join(inner/left_outer),
+                   Aggregate, Union, Replicate, Sink
+    Semantics      bag (set/ordered handled by the calling EV's policy)
+    Restrictions   linear predicates; anything else raises ``UnsupportedOp``
+    Monotonic      n/a — validity policy lives in the EVs, not here
+    Proves inequiv complete only for union-free SPJ blocks
+    ============== ==========================================================
 """
 
 from __future__ import annotations

@@ -4,6 +4,17 @@ Complete in its fragment (bag-equivalence of linear-SPJ is canonical-form
 isomorphism), so it IS inequivalence-capable there, and it is
 restriction-monotonic (§5.5: adding any operator to an invalid window keeps
 it invalid, since validity = "all ops are SPJ with linear predicates").
+
+Supported fragment (format shared by all EVs; see docs/ARCHITECTURE.md):
+
+    ============== ==========================================================
+    EV             SpesEV (``spes``)
+    Operators      Source, Filter, Project, Join(inner), Replicate, Sink
+    Semantics      bag, set (a bag proof implies set equality)
+    Restrictions   S1 operators restricted to SPJ; S2 predicates linear
+    Monotonic      yes (Def 5.9)
+    Proves inequiv yes — complete in its fragment
+    ============== ==========================================================
 """
 
 from __future__ import annotations
@@ -68,6 +79,20 @@ class UDPEV(BaseEV):
     Third EV demonstrating §8 "Using multiple EVs": it covers Union windows
     that Equitas/Spes reject, so multi-EV Veer verifies W3/W4-style workflows
     without segmentation boundaries at every Union.
+
+    Supported fragment (format shared by all EVs; see docs/ARCHITECTURE.md):
+
+        ============== ======================================================
+        EV             UDPEV (``udp``)
+        Operators      Source, Filter, Project, Join(inner), Union,
+                       Replicate, Sink
+        Semantics      bag, set
+        Restrictions   U1 operators restricted to Union-SPJ; U2 predicates
+                       linear
+        Monotonic      yes
+        Proves inequiv only in the union-free sub-fragment (branch-wise
+                       bijection is incomplete across Union)
+        ============== ======================================================
     """
 
     name = "udp"

@@ -24,6 +24,7 @@ from repro.core import dag as D
 from repro.core.dag import DataflowDAG
 from repro.core.edits import EditMapping, enumerate_mappings, identity_mapping
 from repro.core.ev.base import BaseEV, QueryPair
+from repro.core.ev.cache import CachedEV, VerdictCache, wrap_evs
 from repro.core.ranking import decomposition_score, segment_score
 from repro.core.symbolic import quick_inequivalent
 from repro.core.window import Change, VersionPair
@@ -45,6 +46,11 @@ class VeerStats:
     fast_inequivalence_hit: bool = False
     budget_exhausted: bool = False
     verdict: Optional[bool] = None
+    # verdict-cache accounting (only moves when a VerdictCache is attached)
+    cache_hits: int = 0          # EV checks answered from the verdict cache
+    windows_deduped: int = 0     # windows resolved via in-pair fingerprint dedup
+    ev_calls_saved: int = 0      # cache_hits + per-window savings from dedup
+    ev_time_saved: float = 0.0   # sum of original check times of saved calls
 
     def as_dict(self) -> Dict[str, object]:
         return dict(self.__dict__)
@@ -67,8 +73,10 @@ class Veer:
         max_decompositions: int = 50_000,
         max_windows: int = 200_000,
         mapping_limit: int = 8,
+        verdict_cache: Optional[VerdictCache] = None,
     ):
-        self.evs = list(evs)
+        self.verdict_cache = verdict_cache
+        self.evs = wrap_evs(evs, verdict_cache)
         self.segmentation = segmentation
         self.pruning = pruning
         self.ranking = ranking
@@ -79,6 +87,14 @@ class Veer:
         self.max_decompositions = max_decompositions
         self.max_windows = max_windows
         self.mapping_limit = mapping_limit
+
+    def attach_cache(self, cache: VerdictCache) -> "Veer":
+        """Wire a (possibly shared) verdict cache into this verifier —
+        idempotent; used by ``ReuseManager``/``VersionChainSession`` to share
+        one cache across many ``verify`` calls and sessions."""
+        self.verdict_cache = cache
+        self.evs = wrap_evs(self.evs, cache)
+        return self
 
     # ------------------------------------------------------------------ public
     def verify(
@@ -126,7 +142,7 @@ class Veer:
             stats.fast_inequivalence_hit = True
             return FALSE
 
-        ctx = _SearchContext(pair, self.evs, stats)
+        ctx = _SearchContext(pair, self.evs, stats, self.verdict_cache)
 
         if self.segmentation:
             segments = self._segment(pair, ctx)
@@ -331,23 +347,29 @@ class Veer:
         windows: Tuple[FrozenSet[int], ...],
         entire_pair: Optional[FrozenSet[int]],
     ) -> Optional[bool]:
-        verdicts = []
-        for w in windows:
+        """Batched dispatch: resolve every window that needs no EV call first
+        (memoized verdicts, then verdict-cache-covered windows), so a cached
+        non-True verdict short-circuits before any EV runs; the remaining
+        windows are deduplicated by canonical fingerprint so isomorphic
+        windows inside one decomposition cost a single EV call."""
+        order, adopt = ctx.batch_plan(windows)
+        resolved = 0
+        for w in order:
             v = ctx.window_verdict(w)
-            verdicts.append(v)
+            resolved += 1
+            for w2 in adopt.get(w, ()):
+                ctx.adopt_verdict(w2, v)
+                resolved += 1
             if v is not TRUE:
-                break
-        if verdicts and all(v is TRUE for v in verdicts) and len(verdicts) == len(windows):
-            return TRUE
-        if (
-            len(windows) == 1
-            and entire_pair is not None
-            and windows[0] == entire_pair
-            and verdicts
-            and verdicts[0] is FALSE
-        ):
-            return FALSE  # inequivalence-capable EV refuted the whole pair
-        return UNKNOWN
+                if (
+                    len(windows) == 1
+                    and entire_pair is not None
+                    and windows[0] == entire_pair
+                    and v is FALSE
+                ):
+                    return FALSE  # inequivalence-capable EV refuted the pair
+                return UNKNOWN
+        return TRUE if resolved == len(windows) else UNKNOWN
 
     # ------------------------------------------------------------- Algorithm 1
     def verify_single_edit(
@@ -370,7 +392,7 @@ class Veer:
             return TRUE, stats
         if len(pair.changes) != 1:
             raise ValueError("Algorithm 1 requires a single change")
-        ctx = _SearchContext(pair, self.evs, stats)
+        ctx = _SearchContext(pair, self.evs, stats, self.verdict_cache)
         verdict, _ = self._algorithm1(ctx, pair.changes[0])
         stats.total_time = time.perf_counter() - t0
         stats.verdict = verdict
@@ -424,24 +446,87 @@ class Veer:
         pair = VersionPair(P, Q, m, semantics)
         if len(pair.changes) != 1:
             raise ValueError("single change required")
-        ctx = _SearchContext(pair, self.evs, VeerStats())
+        ctx = _SearchContext(pair, self.evs, VeerStats(), self.verdict_cache)
         _, mcws = self._algorithm1(ctx, pair.changes[0])
         return mcws
 
 
 class _SearchContext:
-    """Per-(pair, EV-set) caches: query pairs, validity, verdicts, dead set."""
+    """Per-(pair, EV-set) caches: query pairs, validity, verdicts, dead set.
 
-    def __init__(self, pair: VersionPair, evs: Sequence[BaseEV], stats: VeerStats):
+    When a cross-version ``VerdictCache`` is attached, the context also plans
+    *batched* window verification: cache-covered windows run first (they cost
+    no EV call, and a cached non-True verdict aborts the decomposition before
+    any EV fires) and in-pair isomorphic windows collapse onto a single
+    representative whose verdict the others adopt.
+    """
+
+    def __init__(
+        self,
+        pair: VersionPair,
+        evs: Sequence[BaseEV],
+        stats: VeerStats,
+        cache: Optional[VerdictCache] = None,
+    ):
         self.pair = pair
         self.evs = evs
         self.stats = stats
+        self.cache = cache
         self._valid: Dict[FrozenSet[int], Tuple[int, ...]] = {}
         self._verdict: Dict[FrozenSet[int], Optional[bool]] = {}
         self.dead: Set[FrozenSet[int]] = set()
 
     def query_pair(self, win: FrozenSet[int]) -> Optional[QueryPair]:
         return self.pair.to_query_pair(win)
+
+    def batch_plan(
+        self, windows: Tuple[FrozenSet[int], ...]
+    ) -> Tuple[List[FrozenSet[int]], Dict[FrozenSet[int], List[FrozenSet[int]]]]:
+        """Partition a decomposition's windows into a verification order and
+        an adoption map (representative -> isomorphic windows it answers
+        for).  Without a verdict cache this degrades to the plain order."""
+        if self.cache is None or len(windows) == 1:
+            return list(windows), {}
+        for w in windows:
+            # a memoized non-True verdict dooms the decomposition: surface
+            # it alone, before spending fingerprint/validate work on peers
+            if w in self._verdict and self._verdict[w] is not TRUE:
+                return [w], {}
+        memoized: List[FrozenSet[int]] = []
+        covered: List[FrozenSet[int]] = []
+        fresh: List[FrozenSet[int]] = []
+        plain: List[FrozenSet[int]] = []
+        adopt: Dict[FrozenSet[int], List[FrozenSet[int]]] = {}
+        rep_by_fp: Dict[str, FrozenSet[int]] = {}
+        for w in windows:
+            if w in self._verdict:
+                memoized.append(w)
+                continue
+            fp = self.pair.window_fingerprint(w)
+            if fp is None:
+                plain.append(w)  # ill-formed: window_verdict resolves cheaply
+                continue
+            rep = rep_by_fp.get(fp)
+            if rep is not None:
+                adopt.setdefault(rep, []).append(w)
+                continue
+            rep_by_fp[fp] = w
+            names = [self.evs[i].name for i in self.valid_evs(w)]
+            if names and self.cache.covers(names, fp):
+                covered.append(w)
+            else:
+                fresh.append(w)
+        return memoized + covered + fresh + plain, adopt
+
+    def adopt_verdict(self, win: FrozenSet[int], v: Optional[bool]) -> None:
+        """Record a verdict obtained from an isomorphic window — sound
+        because fingerprint equality implies the EVs would answer the same."""
+        if win in self._verdict:
+            return
+        self._verdict[win] = v
+        self.stats.windows_verified += 1
+        self.stats.windows_deduped += 1
+        self.stats.ev_calls_saved += 1
 
     def valid_evs(self, win: FrozenSet[int]) -> Tuple[int, ...]:
         if win in self._valid:
@@ -471,10 +556,20 @@ class _SearchContext:
             if qp is not None:
                 for i in self.valid_evs(win):
                     ev = self.evs[i]
-                    self.stats.ev_calls += 1
+                    cached_ev = isinstance(ev, CachedEV)
+                    hits_before = ev.hits if cached_ev else 0
+                    saved_before = ev.time_saved if cached_ev else 0.0
                     t0 = time.perf_counter()
                     r = ev.check(qp)
-                    self.stats.ev_time += time.perf_counter() - t0
+                    dt = time.perf_counter() - t0
+                    if cached_ev and ev.hits > hits_before:
+                        # answered from the verdict cache: not an EV call
+                        self.stats.cache_hits += 1
+                        self.stats.ev_calls_saved += 1
+                        self.stats.ev_time_saved += ev.time_saved - saved_before
+                    else:
+                        self.stats.ev_calls += 1
+                        self.stats.ev_time += dt
                     if r is True:
                         v = TRUE
                         break

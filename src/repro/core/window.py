@@ -111,6 +111,7 @@ class VersionPair:
         self.schemas_p = infer_schema(P, {})
         self.schemas_q = infer_schema(Q, {})
         self._qp_cache: Dict[FrozenSet[int], Optional[QueryPair]] = {}
+        self._fp_cache: Dict[FrozenSet[int], str] = {}
 
     # -- changes -----------------------------------------------------------------
     def _edit_units(self, e) -> FrozenSet[int]:
@@ -329,6 +330,22 @@ class VersionPair:
         qp = self._build_query_pair(win)
         self._qp_cache[win] = qp
         return qp
+
+    def window_fingerprint(self, win: FrozenSet[int]) -> Optional[str]:
+        """Canonical content address of the window's query pair (None when
+        the window is ill-formed).  Rename-invariant — two isomorphic windows
+        from *different* version pairs share a fingerprint, which is what
+        lets the cross-version verdict cache answer for them (see
+        ``QueryPair.fingerprint`` and ``repro.core.ev.cache``)."""
+        fp = self._fp_cache.get(win)
+        if fp is not None:
+            return fp
+        qp = self.to_query_pair(win)
+        if qp is None:
+            return None
+        fp = qp.fingerprint()
+        self._fp_cache[win] = fp
+        return fp
 
     def _build_query_pair(self, win: FrozenSet[int]) -> Optional[QueryPair]:
         fwd = self.mapping.forward

@@ -9,28 +9,29 @@ from __future__ import annotations
 
 import jax
 
+# jax.sharding.AxisType landed after 0.4.x; Auto is the default there anyway
+_AXIS_TYPE = getattr(jax.sharding, "AxisType", None)
+
+
+def _make_mesh(shape, axes):
+    if _AXIS_TYPE is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(
+        shape, axes, axis_types=(_AXIS_TYPE.Auto,) * len(axes)
+    )
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return _make_mesh(shape, axes)
 
 
 def make_debug_mesh(n_data: int = 2, n_model: int = 4, *, multi_pod: bool = False):
     """Small mesh for CI-sized sharding tests (requires host-device override)."""
     if multi_pod:
-        return jax.make_mesh(
-            (2, n_data, n_model),
-            ("pod", "data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 3,
-        )
-    return jax.make_mesh(
-        (n_data, n_model),
-        ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+        return _make_mesh((2, n_data, n_model), ("pod", "data", "model"))
+    return _make_mesh((n_data, n_model), ("data", "model"))
 
 
 def dp_total(mesh) -> int:

@@ -21,6 +21,7 @@ import numpy as np
 
 from repro.core.dag import DataflowDAG
 from repro.core.edits import identity_mapping
+from repro.core.ev.cache import VerdictCache
 from repro.core.verifier import Veer
 from repro.engine.executor import execute
 from repro.engine.table import Table
@@ -35,6 +36,7 @@ class ReuseStats:
     verify_time: float = 0.0
     execute_time: float = 0.0
     dedup_skipped_writes: int = 0
+    verdict_cache_hits: int = 0
 
 
 @dataclass
@@ -95,8 +97,29 @@ def _jsonable(v):
 
 
 class ReuseManager:
-    def __init__(self, directory: str, veer: Veer, *, semantics: str = "bag"):
+    def __init__(
+        self,
+        directory: str,
+        veer: Veer,
+        *,
+        semantics: str = "bag",
+        verdict_cache: Optional[VerdictCache] = None,
+    ):
         self.store = MaterializationStore(directory)
+        # EV verdicts live next to the materializations: one content-addressed
+        # directory of reusable artifacts, shared across sessions (and with
+        # VersionChainSession when handed the same cache).  An explicit
+        # ``verdict_cache`` always wins; otherwise a verifier that already
+        # carries a cache keeps it (never silently repoint shared state), and
+        # only a cache-less verifier gets the store-local default.
+        if verdict_cache is not None:
+            veer.attach_cache(verdict_cache)
+        elif veer.verdict_cache is None:
+            verdict_cache = VerdictCache(self.store.dir / "ev_verdicts.json")
+            veer.attach_cache(verdict_cache)
+        else:
+            verdict_cache = veer.verdict_cache
+        self.verdict_cache = verdict_cache
         self.veer = veer
         self.semantics = semantics
         self.versions: List[_Version] = []
@@ -116,10 +139,11 @@ class ReuseManager:
             if not remaining:
                 break
             t0 = time.perf_counter()
-            verdict, _ = self.veer.verify(
+            verdict, vstats = self.veer.verify(
                 prev.dag, dag, semantics=self.semantics
             )
             self.stats.verify_time += time.perf_counter() - t0
+            self.stats.verdict_cache_hits += vstats.cache_hits
             if verdict is True:
                 mapping = identity_mapping(prev.dag, dag).forward
                 for psink, digest in prev.sink_objects.items():
@@ -145,4 +169,5 @@ class ReuseManager:
                 self.stats.dedup_skipped_writes += 1
             sink_objects[s] = digest
         self.versions.append(_Version(len(self.versions), dag, sink_objects))
+        self.verdict_cache.save()  # verdicts persist like materializations do
         return results

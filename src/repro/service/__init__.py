@@ -1,0 +1,17 @@
+"""Service layer: chain-level verification with cross-pair verdict reuse."""
+
+from repro.service.chain import (
+    ChainReport,
+    PairReport,
+    VersionChainSession,
+    verify_chain,
+)
+from repro.core.ev.cache import VerdictCache
+
+__all__ = [
+    "ChainReport",
+    "PairReport",
+    "VersionChainSession",
+    "verify_chain",
+    "VerdictCache",
+]

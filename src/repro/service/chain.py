@@ -1,0 +1,216 @@
+"""Version-chain verification service (paper §1 workload, ROADMAP north star).
+
+Iterative analytics produces *chains* of dataflow versions: v1 → v2 → … → vn,
+each a handful of edits from its predecessor.  ``Veer.verify`` answers one
+pair; a ``VersionChainSession`` answers the whole chain while amortizing EV
+cost across pairs through the canonical-fingerprint verdict cache
+(``repro.core.ev.cache``): a window isomorphic to one decided for *any*
+earlier pair — or persisted by an earlier session — resolves without an EV
+call.  This is the GEqO/EqDAC observation (cache and share semantic
+equivalence sub-results) applied to Veer's windowed decomposition search.
+
+Typical use::
+
+    session = VersionChainSession(cache_path="~/.veer/verdicts.json")
+    session.submit(v1)                  # first version: nothing to verify
+    report = session.submit(v2)         # verifies (v1, v2)
+    report = session.submit(v3)         # verifies (v2, v3), reusing verdicts
+    print(session.report().summary())
+    session.save()                      # persist verdicts for the next session
+
+or, batch-style::
+
+    report = verify_chain([v1, v2, ..., vn])
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core import dag as D
+from repro.core.dag import DataflowDAG
+from repro.core.edits import EditMapping
+from repro.core.ev.base import BaseEV
+from repro.core.ev.cache import VerdictCache
+from repro.core.verifier import Veer, VeerStats, make_veer_plus
+
+
+def _default_evs() -> List[BaseEV]:
+    from repro.core.ev import default_evs
+
+    return default_evs()
+
+
+@dataclass
+class PairReport:
+    """Verification outcome for one consecutive pair of the chain."""
+
+    index: int                      # pair k verifies (version k-1, version k)
+    verdict: Optional[bool]         # True / False / None (Unknown)
+    wall_time: float
+    stats: VeerStats
+
+    @property
+    def equivalent(self) -> bool:
+        return self.verdict is True
+
+    @property
+    def ev_calls(self) -> int:
+        return self.stats.ev_calls
+
+    @property
+    def cache_hits(self) -> int:
+        return self.stats.cache_hits
+
+    @property
+    def ev_calls_saved(self) -> int:
+        return self.stats.ev_calls_saved
+
+    def row(self) -> str:
+        v = {True: "EQ", False: "NEQ", None: "UNK"}[self.verdict]
+        return (
+            f"pair {self.index:>3}: {v:>3}  ev_calls={self.ev_calls:<4} "
+            f"cache_hits={self.cache_hits:<4} saved={self.ev_calls_saved:<4} "
+            f"{self.wall_time * 1e3:8.1f} ms"
+        )
+
+
+@dataclass
+class ChainReport:
+    """Aggregate over all pairs verified so far in a session."""
+
+    pairs: List[PairReport] = field(default_factory=list)
+
+    @property
+    def total_ev_calls(self) -> int:
+        return sum(p.ev_calls for p in self.pairs)
+
+    @property
+    def total_cache_hits(self) -> int:
+        return sum(p.cache_hits for p in self.pairs)
+
+    @property
+    def total_ev_calls_saved(self) -> int:
+        return sum(p.ev_calls_saved for p in self.pairs)
+
+    @property
+    def total_wall_time(self) -> float:
+        return sum(p.wall_time for p in self.pairs)
+
+    @property
+    def verdicts(self) -> List[Optional[bool]]:
+        return [p.verdict for p in self.pairs]
+
+    def summary(self) -> str:
+        lines = [p.row() for p in self.pairs]
+        lines.append(
+            f"chain: {len(self.pairs)} pairs, "
+            f"{self.total_ev_calls} EV calls, "
+            f"{self.total_cache_hits} cache hits, "
+            f"{self.total_ev_calls_saved} calls saved, "
+            f"{self.total_wall_time * 1e3:.1f} ms"
+        )
+        return "\n".join(lines)
+
+
+class VersionChainSession:
+    """Stateful chain-verification service around a cache-backed ``Veer``.
+
+    Each ``submit`` verifies the new version against the previous one; all
+    pairs share one ``VerdictCache`` (optionally persisted at ``cache_path``
+    and/or shared with a ``ReuseManager``'s store directory), so pair *k*
+    pays EV cost only for windows no earlier pair or session has decided.
+    """
+
+    def __init__(
+        self,
+        evs: Optional[Sequence[BaseEV]] = None,
+        *,
+        cache: Optional[VerdictCache] = None,
+        cache_path: Optional[str] = None,
+        semantics: str = D.BAG,
+        veer: Optional[Veer] = None,
+        **veer_kw,
+    ):
+        if cache is None:
+            cache = VerdictCache(cache_path)
+        elif cache_path is not None:
+            raise ValueError("pass either cache or cache_path, not both")
+        self.cache = cache
+        if veer is None:
+            veer = make_veer_plus(
+                list(evs) if evs is not None else _default_evs(), **veer_kw
+            )
+        elif evs is not None or veer_kw:
+            raise ValueError("pass either veer or evs/veer_kw, not both")
+        self.veer = veer.attach_cache(cache)
+        self.semantics = semantics
+        # only the previous version is needed for the next pair; a long-lived
+        # session must not accumulate every DAG it ever saw
+        self._prev: Optional[DataflowDAG] = None
+        self.version_count = 0
+        self._report = ChainReport()
+
+    # -- service API ---------------------------------------------------------
+    def submit(
+        self,
+        version: DataflowDAG,
+        mapping: Optional[EditMapping] = None,
+    ) -> Optional[PairReport]:
+        """Append a version; verify it against the previous one.
+
+        ``mapping`` is the tracked edit mapping from the previous version to
+        this one (defaults to the id-stable identity mapping, the natural
+        choice when the version-control layer assigns stable operator ids).
+        Returns ``None`` for the first version (nothing to verify yet).
+        """
+        version.validate()
+        prev, self._prev = self._prev, version
+        self.version_count += 1
+        if prev is None:
+            return None
+        t0 = time.perf_counter()
+        verdict, stats = self.veer.verify(
+            prev, version, mapping, semantics=self.semantics
+        )
+        report = PairReport(
+            index=self.version_count - 1,
+            verdict=verdict,
+            wall_time=time.perf_counter() - t0,
+            stats=stats,
+        )
+        self._report.pairs.append(report)
+        return report
+
+    def report(self) -> ChainReport:
+        return self._report
+
+    def save(self) -> None:
+        """Persist the verdict cache (no-op for purely in-memory caches)."""
+        self.cache.save()
+
+    def __enter__(self) -> "VersionChainSession":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.save()
+
+
+def verify_chain(
+    versions: Sequence[DataflowDAG],
+    mappings: Optional[Sequence[Optional[EditMapping]]] = None,
+    **session_kw,
+) -> ChainReport:
+    """Batch entry point: verify every consecutive pair of ``versions``.
+
+    ``mappings[k]`` (optional) maps version k to version k+1.
+    """
+    if mappings is not None and len(mappings) != len(versions) - 1:
+        raise ValueError("need exactly one mapping per consecutive pair")
+    session = VersionChainSession(**session_kw)
+    for k, v in enumerate(versions):
+        session.submit(v, mappings[k - 1] if mappings and k > 0 else None)
+    session.save()
+    return session.report()

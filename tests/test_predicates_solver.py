@@ -4,6 +4,7 @@ import numpy as np
 import pytest
 from fractions import Fraction
 
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.predicates import LinCmp, LinExpr, Pred, StrEq

@@ -10,6 +10,9 @@ Random workflows + random rewrites; the engine is ground truth (Def 2.2):
 """
 
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from helpers import SCHEMA, chain, f, proj_identity, rand_table

@@ -1,0 +1,282 @@
+"""Canonical fingerprint + verdict-cache behavior.
+
+The cache is only sound if fingerprint equality implies QueryPair
+isomorphism (hits may never conflate semantically different windows) and
+only useful if isomorphic windows actually collide (renames, insertion
+order, other version pairs).
+"""
+
+import pytest
+
+from helpers import SCHEMA, chain, f
+from repro.core import dag as D
+from repro.core.dag import DataflowDAG, Link, Operator
+from repro.core.edits import identity_mapping
+from repro.core.ev import (
+    CachedEV,
+    EquitasEV,
+    QueryPair,
+    SpesEV,
+    UDPEV,
+    VerdictCache,
+)
+from repro.core.predicates import Pred
+from repro.core.verifier import Veer, make_veer_plus
+from repro.core.window import VersionPair
+
+op = Operator.make
+
+
+def _universe_fp(P, Q):
+    pair = VersionPair(P, Q, identity_mapping(P, Q))
+    return pair.window_fingerprint(frozenset(range(len(pair.units))))
+
+
+def _two_filter_pair(prefix, swap=True, a_thresh=2):
+    """P: src->fa->fb->sink ; Q: same with filters swapped (equivalent)."""
+
+    def build(order):
+        fa = op(f"{prefix}fa", D.FILTER, pred=Pred.cmp("a", ">", a_thresh))
+        fb = op(f"{prefix}fb", D.FILTER, pred=Pred.cmp("b", "<", 5))
+        by_id = {fa.id: fa, fb.id: fb}
+        path = [f"{prefix}src"] + [o.id for o in order(fa, fb)] + [f"{prefix}sink"]
+        return DataflowDAG(
+            [op(f"{prefix}src", D.SOURCE, schema=SCHEMA), fa, fb,
+             op(f"{prefix}sink", D.SINK, semantics=D.BAG)],
+            [Link(x, y) for x, y in zip(path, path[1:])],
+        )
+
+    P = build(lambda fa, fb: (fa, fb))
+    Q = build(lambda fa, fb: (fb, fa) if swap else (fa, fb))
+    return P, Q
+
+
+# ---------------------------------------------------------------------------
+# fingerprint invariance
+# ---------------------------------------------------------------------------
+
+
+def test_fingerprint_invariant_under_renaming():
+    P1, Q1 = _two_filter_pair("x")
+    P2, Q2 = _two_filter_pair("some_other_name_")
+    fp1, fp2 = _universe_fp(P1, Q1), _universe_fp(P2, Q2)
+    assert fp1 is not None
+    assert fp1 == fp2
+
+
+def test_fingerprint_invariant_under_insertion_order():
+    P, Q = _two_filter_pair("x")
+    P_shuffled = DataflowDAG(
+        list(reversed(list(P.ops.values()))), list(reversed(P.links))
+    )
+    assert _universe_fp(P, Q) == _universe_fp(P_shuffled, Q)
+
+
+def test_fingerprint_collides_across_version_pairs():
+    """The same rewrite applied in two different version pairs (renamed
+    operators, extra unrelated branch present) yields the same window
+    fingerprint — the cross-pair cache-hit condition."""
+    P1, Q1 = _two_filter_pair("x")
+    fp1 = _universe_fp(P1, Q1)
+
+    # a different version pair: renamed ops + an unrelated second branch
+    P2, Q2 = _two_filter_pair("y")
+    extra_ops = [
+        op("other_src", D.SOURCE, schema=SCHEMA),
+        op("other_sink", D.SINK, semantics=D.BAG),
+    ]
+    extra_links = [Link("other_src", "other_sink")]
+    P2 = DataflowDAG(list(P2.ops.values()) + extra_ops, P2.links + extra_links)
+    Q2 = DataflowDAG(list(Q2.ops.values()) + extra_ops, Q2.links + extra_links)
+    pair2 = VersionPair(P2, Q2, identity_mapping(P2, Q2))
+    # the window covering only the changed branch is isomorphic to pair 1
+    branch_units = frozenset(
+        i for i, u in enumerate(pair2.units)
+        if (u.p or u.q).startswith("y")
+    )
+    assert pair2.window_fingerprint(branch_units) == fp1
+
+
+def test_fingerprint_differs_on_predicate_modification():
+    P1, Q1 = _two_filter_pair("x")
+    P2, Q2 = _two_filter_pair("x", a_thresh=3)  # same shape, different pred
+    assert _universe_fp(P1, Q1) != _universe_fp(P2, Q2)
+
+
+def test_fingerprint_differs_on_structural_change():
+    P, Q = _two_filter_pair("x")
+    Q_extra = chain(
+        f("fa", "a", ">", 2), f("fb", "b", "<", 5), f("fc", "c", ">", 0),
+        src="xsrc", sink_sem=D.BAG,
+    )
+    # different op count / wiring ⇒ different fingerprint
+    pair_a = _universe_fp(P, Q)
+    pair_b = _universe_fp(P, DataflowDAG(
+        [o if o.id != "sink" else op("xsink", D.SINK, semantics=D.BAG)
+         for o in Q_extra.ops.values()],
+        [l if l.dst != "sink" else Link(l.src, "xsink") for l in Q_extra.links],
+    ))
+    assert pair_a != pair_b
+
+
+def test_fingerprint_distinguishes_source_sharing():
+    """One shared source vs two identical sources must not collide: binding
+    different tables to the two sources distinguishes the computations."""
+    shared = QueryPair(
+        DataflowDAG(
+            [op("s", D.SOURCE, schema=("a",)),
+             op("j", D.JOIN, on=(("a", "a"),), how="inner")],
+            [Link("s", "j", 0), Link("s", "j", 1)],
+        ),
+        DataflowDAG(
+            [op("s", D.SOURCE, schema=("a",)),
+             op("j", D.JOIN, on=(("a", "a"),), how="inner")],
+            [Link("s", "j", 0), Link("s", "j", 1)],
+        ),
+        (("j", "j"),),
+    )
+    separate = QueryPair(
+        DataflowDAG(
+            [op("s", D.SOURCE, schema=("a",)), op("t", D.SOURCE, schema=("a",)),
+             op("j", D.JOIN, on=(("a", "a"),), how="inner")],
+            [Link("s", "j", 0), Link("t", "j", 1)],
+        ),
+        DataflowDAG(
+            [op("s", D.SOURCE, schema=("a",)), op("t", D.SOURCE, schema=("a",)),
+             op("j", D.JOIN, on=(("a", "a"),), how="inner")],
+            [Link("s", "j", 0), Link("t", "j", 1)],
+        ),
+        (("j", "j"),),
+    )
+    assert shared.fingerprint() != separate.fingerprint()
+
+
+def test_fingerprint_distinguishes_join_port_order():
+    def qp(flip_q):
+        def side(flip):
+            return DataflowDAG(
+                [op("s", D.SOURCE, schema=("a",)), op("t", D.SOURCE, schema=("b",)),
+                 op("j", D.JOIN, on=(("a", "b"),), how="inner")],
+                [Link("s", "j", 1 if flip else 0),
+                 Link("t", "j", 0 if flip else 1)],
+            )
+        return QueryPair(side(False), side(flip_q), (("j", "j"),))
+
+    assert qp(False).fingerprint() != qp(True).fingerprint()
+
+
+# ---------------------------------------------------------------------------
+# CachedEV / VerdictCache
+# ---------------------------------------------------------------------------
+
+
+def test_cached_ev_hit_and_miss():
+    P, Q = _two_filter_pair("x")
+    pair = VersionPair(P, Q, identity_mapping(P, Q))
+    qp = pair.to_query_pair(frozenset(range(len(pair.units))))
+    assert qp is not None
+    cache = VerdictCache()
+    ev = CachedEV(SpesEV(), cache)
+    assert ev.validate(qp)
+    assert ev.check(qp) is True
+    assert (ev.hits, ev.misses) == (0, 1)
+    assert ev.check(qp) is True
+    assert (ev.hits, ev.misses) == (1, 1)
+    # proxied attributes behave like the wrapped EV
+    assert ev.name == "spes"
+    assert ev.can_prove_inequivalence
+
+
+def test_verdict_cache_round_trip(tmp_path):
+    path = tmp_path / "verdicts.json"
+    cache = VerdictCache(path)
+    cache.put("spes", "f" * 32, True, 0.01)
+    cache.put("equitas", "0" * 32, None, 0.02)
+    cache.save()
+
+    fresh = VerdictCache(path)
+    assert len(fresh) == 2
+    assert fresh.get("spes", "f" * 32).verdict is True
+    assert fresh.get("equitas", "0" * 32).verdict is None
+    assert fresh.get("spes", "missing") is None
+    assert fresh.covers(["spes", "equitas"], "f" * 32) is False
+
+
+def test_verdict_cache_tolerates_corrupt_file(tmp_path):
+    path = tmp_path / "verdicts.json"
+    path.write_text("not json{")
+    cache = VerdictCache(path)  # must not raise
+    assert len(cache) == 0
+
+
+def test_cached_verify_reuses_across_pairs_and_sessions(tmp_path):
+    """End-to-end: the renamed copy of a verified pair costs zero EV calls,
+    in-memory and again after a cache save/load cycle."""
+    path = tmp_path / "verdicts.json"
+    evs = lambda: [EquitasEV(), SpesEV(), UDPEV()]
+    P1, Q1 = _two_filter_pair("x")
+    P2, Q2 = _two_filter_pair("y")
+
+    cache = VerdictCache(path)
+    veer = make_veer_plus(evs(), verdict_cache=cache)
+    v1, s1 = veer.verify(P1, Q1)
+    v2, s2 = veer.verify(P2, Q2)
+    assert v1 is True and v2 is True
+    assert s1.ev_calls > 0 and s1.cache_hits == 0
+    assert s2.ev_calls == 0 and s2.cache_hits > 0
+    assert s2.ev_calls_saved >= s2.cache_hits
+    cache.save()
+
+    # new "session": same question answered entirely from the persisted file
+    veer2 = make_veer_plus(evs(), verdict_cache=VerdictCache(path))
+    v3, s3 = veer2.verify(P1, Q1)
+    assert v3 is True
+    assert s3.ev_calls == 0 and s3.cache_hits > 0
+
+
+def test_attach_cache_rebinds_existing_wrappers():
+    """Attaching a new cache must re-bind CachedEV wrappers — a verifier
+    created with cache A and handed cache B must read/write B."""
+    P, Q = _two_filter_pair("x")
+    cache_a, cache_b = VerdictCache(), VerdictCache()
+    veer = make_veer_plus(
+        [EquitasEV(), SpesEV(), UDPEV()], verdict_cache=cache_a
+    )
+    veer.attach_cache(cache_b)
+    verdict, _ = veer.verify(P, Q)
+    assert verdict is True
+    assert len(cache_b) > 0
+    assert len(cache_a) == 0
+
+
+def test_fingerprint_handles_deep_pipelines():
+    """Canonicalization must not hit the interpreter recursion limit on
+    pipelines deeper than ~1000 operators."""
+    depth = 2000
+    filters = [f(f"d{i}", "a", ">", -(10 ** 9) - i) for i in range(depth)]
+    P = chain(*filters)
+    pair = VersionPair(P, P, identity_mapping(P, P))
+    fp = pair.to_query_pair(
+        frozenset(range(len(pair.units)))
+    ).fingerprint()
+    assert isinstance(fp, str) and len(fp) == 32
+
+
+def test_cache_never_changes_verdicts():
+    """Cached and uncached verification agree on equivalent AND
+    non-equivalent pairs."""
+    cases = []
+    P, Q = _two_filter_pair("x")
+    cases.append((P, Q))
+    # inequivalent: tightened threshold on the Q side only
+    P2, _ = _two_filter_pair("z")
+    Q2 = P2.replace_op(op("zfa", D.FILTER, pred=Pred.cmp("a", ">", 4)))
+    cases.append((P2, Q2))
+    cache = VerdictCache()
+    for P_, Q_ in cases:
+        expected, _ = make_veer_plus([EquitasEV(), SpesEV(), UDPEV()]).verify(P_, Q_)
+        for _ in range(2):  # second round exercises the hit path
+            got, _ = make_veer_plus(
+                [EquitasEV(), SpesEV(), UDPEV()], verdict_cache=cache
+            ).verify(P_, Q_)
+            assert got == expected
