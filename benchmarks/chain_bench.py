@@ -9,7 +9,9 @@ Verifies every consecutive pair of a synthetic iterative-analytics chain
     from the persisted cache file (the cross-session story).
 
 The point of the table: pair *k* gets cheaper than pair 1 once the cache has
-seen its windows — most pairs drop to zero EV calls.
+seen its windows — most pairs drop to zero EV calls — while every decided
+verdict, including fully-warm zero-EV-call ones, stays backed by a
+replayable ``repro.api.Certificate`` (the ``cert%`` columns).
 
     PYTHONPATH=src python benchmarks/chain_bench.py [--smoke] [--versions N]
 """
@@ -23,20 +25,24 @@ import time
 
 sys.path.insert(0, "src")
 
-from repro.core.ev import default_evs
-from repro.core.verifier import make_veer_plus
+from repro.api import VeerConfig
 from repro.service import VersionChainSession
 from repro.service.synthetic import make_chain
 
 
+def _config(use_jaxpr: bool) -> VeerConfig:
+    evs = ("equitas", "spes", "udp") + (("jaxpr",) if use_jaxpr else ())
+    return VeerConfig(evs=evs)
+
+
 def run(n_versions: int = 12, use_jaxpr: bool = False):
     """Returns (baseline_rows, cached_report, warm_report); rows are dicts."""
-    evs = default_evs(include_jaxpr=use_jaxpr)
+    config = _config(use_jaxpr)
     chain = make_chain(n_versions)
 
     baseline = []
     for k, (a, b) in enumerate(zip(chain, chain[1:]), start=1):
-        veer = make_veer_plus(list(evs))
+        veer = config.build()
         t0 = time.perf_counter()
         verdict, stats = veer.verify(a, b)
         baseline.append(
@@ -50,14 +56,14 @@ def run(n_versions: int = 12, use_jaxpr: bool = False):
 
     with tempfile.NamedTemporaryFile(suffix=".json", delete=False) as f:
         cache_path = f.name
-    session = VersionChainSession(list(evs), cache_path=cache_path)
+    session = VersionChainSession(config=config.replace(cache_path=cache_path))
     for v in chain:
         session.submit(v)
     session.save()
     cached = session.report()
 
     # cross-session warm start: a new session reloads the persisted verdicts
-    warm_session = VersionChainSession(list(evs), cache_path=cache_path)
+    warm_session = VersionChainSession(config=config.replace(cache_path=cache_path))
     for v in chain:
         warm_session.submit(v)
     warm = warm_session.report()
@@ -72,6 +78,11 @@ def main(argv=None) -> int:
     ap.add_argument(
         "--jaxpr", action="store_true", help="include the JaxprEV in the roster"
     )
+    ap.add_argument(
+        "--replay",
+        action="store_true",
+        help="additionally replay every warm-chain certificate (audit pass)",
+    )
     args = ap.parse_args(argv)
     if args.versions is not None and args.versions < 2:
         ap.error("--versions must be at least 2 (a chain needs two versions)")
@@ -80,29 +91,48 @@ def main(argv=None) -> int:
     baseline, cached, warm = run(n, use_jaxpr=args.jaxpr)
 
     print(f"== chain of {n} versions ({n - 1} pairs) ==")
-    print("pair  no-cache(ev,ms)    chained(ev,hits,ms)   warm(ev,hits,ms)")
+    print("pair  no-cache(ev,ms)    chained(ev,hits,ms)   warm(ev,hits,ms,cert)")
     for b, c, w in zip(baseline, cached.pairs, warm.pairs):
         print(
             f"{b['pair']:>4}  "
             f"{b['ev_calls']:>4} {b['wall'] * 1e3:8.1f}    "
             f"{c.ev_calls:>4} {c.cache_hits:>5} {c.wall_time * 1e3:8.1f}   "
-            f"{w.ev_calls:>4} {w.cache_hits:>5} {w.wall_time * 1e3:8.1f}"
+            f"{w.ev_calls:>4} {w.cache_hits:>5} {w.wall_time * 1e3:8.1f} "
+            f"{'cert' if w.certified else '----'}"
         )
     base_calls = sum(b["ev_calls"] for b in baseline)
     base_wall = sum(b["wall"] for b in baseline)
+    cert_pct = 100.0 * cached.certified_fraction
+    warm_cert_pct = 100.0 * warm.certified_fraction
     print(
         f"totals: no-cache {base_calls} EV calls / {base_wall * 1e3:.1f} ms ; "
         f"chained {cached.total_ev_calls} EV calls "
-        f"({cached.total_cache_hits} hits) / "
+        f"({cached.total_cache_hits} hits, {cert_pct:.0f}% cert-backed) / "
         f"{cached.total_wall_time * 1e3:.1f} ms ; "
         f"warm {warm.total_ev_calls} EV calls "
-        f"({warm.total_cache_hits} hits) / {warm.total_wall_time * 1e3:.1f} ms"
+        f"({warm.total_cache_hits} hits, {warm_cert_pct:.0f}% cert-backed) / "
+        f"{warm.total_wall_time * 1e3:.1f} ms"
     )
+
+    if args.replay:
+        t0 = time.perf_counter()
+        certs = [p.certificate for p in warm.pairs if p.certificate is not None]
+        bad = sum(1 for c in certs if not c.replay().ok)
+        missing = len(warm.pairs) - len(certs)
+        print(
+            f"replay audit: {len(certs)} certificates replayed "
+            f"({missing} pairs uncertified), {bad} failures, "
+            f"{(time.perf_counter() - t0) * 1e3:.1f} ms"
+        )
+        if bad or missing:
+            return 1
+
     saved_pct = 100.0 * (1 - cached.total_ev_calls / max(1, base_calls))
     # scaffold CSV contract (see benchmarks/run.py)
     print(
         f"chain_bench,{base_wall * 1e6 / max(1, len(baseline)):.1f},"
         f"ev_calls_saved={saved_pct:.0f}%_warm={warm.total_ev_calls}"
+        f"_cert={warm_cert_pct:.0f}%"
     )
 
     ok = (
@@ -110,9 +140,12 @@ def main(argv=None) -> int:
         and all(p.cache_hits > 0 for p in cached.pairs[1:])
         and cached.total_ev_calls < base_calls
         and warm.total_ev_calls == 0
+        and all(p.certified for p in cached.pairs)
+        and all(p.certified for p in warm.pairs)
     )
     if not ok:
-        print("FAILED: caching did not deliver the expected savings")
+        print("FAILED: caching did not deliver the expected savings "
+              "or a verdict lost its certificate")
         return 1
     return 0
 

@@ -1,15 +1,37 @@
-"""Shared benchmark helpers."""
+"""Shared benchmark helpers.
+
+EV rosters come from the ``repro.api`` registry — benchmarks select EVs by
+name like every other caller, so there is exactly one place the roster is
+wired (``repro.api.registry.default_registry``).
+"""
 
 from __future__ import annotations
 
 import time
-from typing import Dict, List, Optional
 
-from repro.core.ev import EquitasEV, JaxprEV, SpesEV, UDPEV, default_evs
-from repro.core.verifier import Veer, make_veer_plus
+from repro.api import VeerConfig, default_registry
+from repro.core.verifier import Veer
 
-DEFAULT_EVS = default_evs  # canonical roster lives in repro.core.ev
-PAPER_EVS = lambda: [EquitasEV()]  # the paper's experiments used Equitas
+
+def DEFAULT_EVS():
+    """The full canonical roster (equitas, spes, udp, jaxpr) — fresh
+    instances from the registry."""
+    return default_registry().build()
+
+
+def PAPER_EVS():
+    """The paper's experiments used Equitas alone."""
+    return default_registry().build(["equitas"])
+
+
+def baseline_veer(budget: int) -> Veer:
+    """The paper's unoptimized Veer over the full roster."""
+    return VeerConfig.baseline(max_decompositions=budget).build()
+
+
+def plus_veer(budget: int) -> Veer:
+    """Veer⁺ over the full roster."""
+    return VeerConfig(max_decompositions=budget).build()
 
 
 def timed_verify(veer: Veer, P, Q, **kw):
@@ -21,7 +43,6 @@ def timed_verify(veer: Veer, P, Q, **kw):
 def spes_direct(P, Q):
     """The 'Spes' row of Table 5: the whole version pair handed directly to
     the EV (no windows) — fails whenever any unsupported op is present."""
-    from repro.core.ev.base import QueryPair
     from repro.core.window import VersionPair
     from repro.core.edits import identity_mapping
 
@@ -33,7 +54,7 @@ def spes_direct(P, Q):
         return None
     if qp is None:
         return None
-    ev = SpesEV()
+    ev = default_registry().create("spes")
     if not ev.validate(qp):
         return None
     return ev.check(qp)

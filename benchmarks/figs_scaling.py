@@ -5,7 +5,7 @@ from __future__ import annotations
 import time
 from typing import Dict, List
 
-from benchmarks.common import DEFAULT_EVS, timed_verify
+from benchmarks.common import baseline_veer, plus_veer, timed_verify
 from benchmarks.workloads import (
     _B,
     _id_proj,
@@ -16,7 +16,6 @@ from benchmarks.workloads import (
 )
 from repro.core import dag as D
 from repro.core.dag import Operator
-from repro.core.verifier import Veer, make_veer_plus
 
 BUDGET = 4000
 
@@ -34,8 +33,8 @@ def fig24_25_multi_edit(verbose: bool = True) -> List[Dict]:
                     kinds=["drop_proj_col"] if name >= "W5" else None,
                 )
             )
-            v1, s1, t1 = timed_verify(Veer(DEFAULT_EVS(), max_decompositions=BUDGET), P, Q)
-            v2, s2, t2 = timed_verify(make_veer_plus(DEFAULT_EVS(), max_decompositions=BUDGET), P, Q)
+            v1, s1, t1 = timed_verify(baseline_veer(BUDGET), P, Q)
+            v2, s2, t2 = timed_verify(plus_veer(BUDGET), P, Q)
             rows.append(
                 dict(
                     fig="24" if eq else "25",
@@ -63,8 +62,8 @@ def fig26_distance(verbose: bool = True) -> List[Dict]:
             Q = edits_with_distance(P, hops, seed=1)
         except ValueError:
             continue
-        v1, s1, t1 = timed_verify(Veer(DEFAULT_EVS(), max_decompositions=BUDGET), P, Q)
-        v2, s2, t2 = timed_verify(make_veer_plus(DEFAULT_EVS(), max_decompositions=BUDGET), P, Q)
+        v1, s1, t1 = timed_verify(baseline_veer(BUDGET), P, Q)
+        v2, s2, t2 = timed_verify(plus_veer(BUDGET), P, Q)
         rows.append(
             dict(
                 fig="26", hops=hops,
@@ -86,8 +85,8 @@ def fig27_num_changes(verbose: bool = True) -> List[Dict]:
     rows = []
     for n in (1, 2, 3, 4):
         Q = apply_equivalent_edits(P, n, seed=7, kinds=["empty_filter", "empty_project"])
-        v1, s1, t1 = timed_verify(Veer(DEFAULT_EVS(), max_decompositions=BUDGET), P, Q)
-        v2, s2, t2 = timed_verify(make_veer_plus(DEFAULT_EVS(), max_decompositions=BUDGET), P, Q)
+        v1, s1, t1 = timed_verify(baseline_veer(BUDGET), P, Q)
+        v2, s2, t2 = timed_verify(plus_veer(BUDGET), P, Q)
         rows.append(
             dict(
                 fig="27", n_changes=n,
@@ -110,8 +109,8 @@ def fig28_num_operators(verbose: bool = True) -> List[Dict]:
     for extra in (2, 3, 4, 5):
         P = apply_equivalent_edits(base, extra, seed=13, kinds=["empty_project"])
         Q = apply_equivalent_edits(P, 2, seed=5)
-        v1, s1, t1 = timed_verify(Veer(DEFAULT_EVS(), max_decompositions=BUDGET), P, Q)
-        v2, s2, t2 = timed_verify(make_veer_plus(DEFAULT_EVS(), max_decompositions=BUDGET), P, Q)
+        v1, s1, t1 = timed_verify(baseline_veer(BUDGET), P, Q)
+        v2, s2, t2 = timed_verify(plus_veer(BUDGET), P, Q)
         rows.append(
             dict(
                 fig="28", n_ops=len(P.ops),

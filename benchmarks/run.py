@@ -17,6 +17,7 @@ def _csv(name: str, seconds: float, derived: str) -> str:
 def main() -> None:
     sys.path.insert(0, ".")
     from benchmarks import (
+        chain_bench,
         figs_scaling,
         roofline_bench,
         table1_ev_support,
@@ -68,6 +69,18 @@ def main() -> None:
     csv_lines.append(_csv(
         "figs24_28_scaling", time.perf_counter() - t0,
         f"median_decomp_reduction={sorted(speedups)[len(speedups)//2]:.1f}x",
+    ))
+
+    print("\n== Chain verification: verdict cache + certificates ==")
+    t0 = time.perf_counter()
+    baseline, cached, warm = chain_bench.run(8)
+    base_calls = sum(b["ev_calls"] for b in baseline)
+    saved_pct = 100.0 * (1 - cached.total_ev_calls / max(1, base_calls))
+    print(cached.summary())
+    csv_lines.append(_csv(
+        "chain_bench", time.perf_counter() - t0,
+        f"ev_calls_saved={saved_pct:.0f}% warm_ev_calls={warm.total_ev_calls} "
+        f"warm_cert_backed={100.0 * warm.certified_fraction:.0f}%",
     ))
 
     print("\n== Roofline table (single-pod baseline) ==")

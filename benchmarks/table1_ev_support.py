@@ -11,10 +11,10 @@ import time
 from typing import Dict, List
 
 from benchmarks.workloads import apply_equivalent_edits, build_workloads, _B, _id_proj
+from repro.api import default_registry
 from repro.core import dag as D
 from repro.core.dag import DataflowDAG
 from repro.core.edits import identity_mapping
-from repro.core.ev import EquitasEV, JaxprEV, SpesEV, UDPEV
 from repro.core.window import VersionPair
 
 
@@ -46,7 +46,7 @@ def _calcite_like() -> Dict[str, DataflowDAG]:
 
 
 def run(verbose: bool = True) -> List[Dict]:
-    evs = [EquitasEV(), SpesEV(), UDPEV(), JaxprEV()]
+    evs = default_registry().build()
     workloads = {**_calcite_like(), **build_workloads()}
     rows = []
     for name, P in workloads.items():

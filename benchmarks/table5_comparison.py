@@ -5,13 +5,12 @@ from __future__ import annotations
 import time
 from typing import Dict, List
 
-from benchmarks.common import DEFAULT_EVS, spes_direct, timed_verify
+from benchmarks.common import baseline_veer, plus_veer, spes_direct, timed_verify
 from benchmarks.workloads import (
     apply_equivalent_edits,
     apply_inequivalent_edits,
     build_workloads,
 )
-from repro.core.verifier import Veer, make_veer_plus
 
 BUDGET = 4000  # decomposition cap standing in for the paper's 1h timeout
 
@@ -38,8 +37,8 @@ def run(verbose: bool = True) -> List[Dict]:
         sd_ineq = spes_direct(P, Qi)
         t_sd_ineq = time.perf_counter() - t0
 
-        veer = Veer(DEFAULT_EVS(), max_decompositions=BUDGET)
-        plus = make_veer_plus(DEFAULT_EVS(), max_decompositions=BUDGET)
+        veer = baseline_veer(BUDGET)
+        plus = plus_veer(BUDGET)
         v_eq, s_eq, t_eq = timed_verify(veer, P, Qe)
         p_eq, ps_eq, pt_eq = timed_verify(plus, P, Qe)
         v_iq, s_iq, t_iq = timed_verify(veer, P, Qi)

@@ -7,11 +7,15 @@ import time
 from typing import Dict, List
 
 from benchmarks.common import timed_verify
-from repro.core.ev import EquitasEV, SpesEV, UDPEV
+from repro.api import default_registry
 
-# paper-faithful EV set: without JaxprEV the Sort stays a segmentation
-# boundary (JaxprEV supports Sort and would dissolve the segments)
-PAPER_SET = lambda: [EquitasEV(), SpesEV(), UDPEV()]
+
+def PAPER_SET():
+    # paper-faithful EV set: without JaxprEV the Sort stays a segmentation
+    # boundary (JaxprEV supports Sort and would dissolve the segments)
+    return default_registry().build(["equitas", "spes", "udp"])
+
+
 from benchmarks.workloads import apply_equivalent_edits, build_workloads
 from repro.core.verifier import Veer
 

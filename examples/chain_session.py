@@ -4,7 +4,8 @@ An analyst session: ten versions of a multi-branch analytics dataflow, each
 1-2 edits apart.  The ``VersionChainSession`` verifies every consecutive
 pair; its verdict cache makes pair k cheaper than pair 1, and a second
 session restored from the persisted cache file verifies the whole chain
-without a single EV call.
+without a single EV call — yet every warm verdict still carries a
+certificate that replays green against fresh EVs (the ``cert`` column).
 
     PYTHONPATH=src python examples/chain_session.py
 """
@@ -14,9 +15,11 @@ import tempfile
 
 sys.path.insert(0, "src")
 
-from repro.core.ev import EquitasEV, SpesEV, UDPEV
+from repro.api import VeerConfig
 from repro.service import VersionChainSession
 from repro.service.synthetic import make_chain
+
+CONFIG = VeerConfig(evs=("equitas", "spes", "udp"))
 
 
 def main():
@@ -25,20 +28,25 @@ def main():
 
     print("-- session 1 (cold cache) --")
     with VersionChainSession(
-        [EquitasEV(), SpesEV(), UDPEV()], cache_path=cache_path
+        config=CONFIG.replace(cache_path=cache_path)
     ) as session:
         for v in versions:
             session.submit(v)
         print(session.report().summary())
 
     print("\n-- session 2 (warm: verdicts restored from disk) --")
-    session2 = VersionChainSession(
-        [EquitasEV(), SpesEV(), UDPEV()], cache_path=cache_path
-    )
+    session2 = VersionChainSession(config=CONFIG.replace(cache_path=cache_path))
     for v in versions:
         session2.submit(v)
-    print(session2.report().summary())
-    assert session2.report().total_ev_calls == 0
+    report = session2.report()
+    print(report.summary())
+    assert report.total_ev_calls == 0
+    # zero EV calls, yet fully auditable: replay one warm certificate
+    cert = report.pairs[-1].certificate
+    print("\nauditing last warm pair:", cert.summary())
+    audit = cert.replay()
+    print(audit.summary())
+    assert audit.ok
 
 
 if __name__ == "__main__":

@@ -12,11 +12,10 @@ import sys, tempfile, time
 
 sys.path.insert(0, "src")
 
+from repro.api import VeerConfig
 from repro.core import dag as D
 from repro.core.dag import DataflowDAG, Link, Operator
 from repro.core.predicates import Pred
-from repro.core.verifier import make_veer_plus
-from repro.core.ev import EquitasEV, JaxprEV, SpesEV, UDPEV
 from repro.data import CORPUS_SCHEMA, corpus_table, ingestion_pipeline
 from repro.reuse import ReuseManager
 
@@ -25,8 +24,7 @@ op = Operator.make
 
 def main():
     store = tempfile.mkdtemp(prefix="veer_store_")
-    veer = make_veer_plus([EquitasEV(), SpesEV(), UDPEV(), JaxprEV()])
-    rm = ReuseManager(store, veer)
+    rm = ReuseManager(store, config=VeerConfig())
     corpus = corpus_table(4096)  # ingestion is the expensive step
 
     print("iteration 1: initial pipeline (quality>0.25, lang=0)")
@@ -77,6 +75,10 @@ def main():
         f"{s.executions} executions, verify={s.verify_time:.2f}s vs "
         f"execute={s.execute_time:.2f}s, dedup'd writes={s.dedup_skipped_writes}"
     )
+    # every reuse decision is certificate-backed and independently auditable
+    for vid, prev_vid, cert in rm.certificates:
+        print(f"  reuse v{vid}<-v{prev_vid}: {cert.summary()}; "
+              f"{cert.replay().summary()}")
 
 
 if __name__ == "__main__":

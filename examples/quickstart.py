@@ -1,8 +1,9 @@
-"""Quickstart: verify equivalence of two workflow versions with Veer.
+"""Quickstart: verify equivalence of two workflow versions via ``repro.api``.
 
 Reproduces the paper's running example in miniature: an analyst refines a
 tweet-analytics workflow (delete a filter, add two filters); Veer decides
-which sinks kept their results.
+which sinks kept their results — and hands back a *certificate* that can be
+independently replayed (and serialized) instead of a bare True.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -13,12 +14,11 @@ sys.path.insert(0, "src")
 
 import numpy as np
 
+from repro.api import Certificate, VeerConfig, verify
 from repro.core import dag as D
 from repro.core.dag import DataflowDAG, Link, Operator
 from repro.core.predicates import Pred
-from repro.core.verifier import Veer, make_veer_plus
-from repro.core.ev import EquitasEV, JaxprEV, SpesEV, UDPEV
-from repro.engine import Table, execute, sink_results_equal
+from repro.engine import Table, sink_results_equal
 
 op = Operator.make
 
@@ -63,18 +63,29 @@ def version2(v1: DataflowDAG) -> DataflowDAG:
 def main():
     v1 = version1()
     v2 = version2(v1)
-    evs = [EquitasEV(), SpesEV(), UDPEV(), JaxprEV()]
 
     print("version 1:", sorted(v1.ops))
     print("version 2:", sorted(v2.ops))
 
-    for name, veer in [("Veer (baseline)", Veer(evs)), ("Veer+", make_veer_plus(evs))]:
-        verdict, stats = veer.verify(v1, v2)
+    for name, config in [
+        ("Veer (baseline)", VeerConfig.baseline()),
+        ("Veer+", VeerConfig()),
+    ]:
+        result = verify(v1, v2, config)
         print(
-            f"{name:16s}: verdict={verdict}  "
-            f"(decompositions={stats.decompositions_explored}, "
-            f"EV calls={stats.ev_calls}, {stats.total_time*1e3:.1f} ms)"
+            f"{name:16s}: verdict={result.verdict}  "
+            f"(decompositions={result.stats.decompositions_explored}, "
+            f"EV calls={result.stats.ev_calls}, "
+            f"{result.stats.total_time*1e3:.1f} ms)"
         )
+
+    # the True verdict is not trust-me: it carries a replayable certificate
+    result = verify(v1, v2)
+    cert = result.certificate
+    print("certificate:", cert.summary())
+    print("replay (fresh EVs, no search):", cert.replay().summary())
+    restored = Certificate.from_json(cert.to_json())   # survives the wire
+    print("after JSON round-trip:", restored.replay().summary())
 
     # but is it TRUE? check against actual execution
     rng = np.random.default_rng(0)
@@ -91,8 +102,8 @@ def main():
 
     # an actually-different version: tighter follower filter
     v3 = v2.replace_op(op("f_followers", D.FILTER, pred=Pred.cmp("followers", ">", 3)))
-    verdict, stats = make_veer_plus(evs).verify(v2, v3)
-    print(f"v2 vs v3 (tightened filter): verdict={verdict} "
+    result = verify(v2, v3)
+    print(f"v2 vs v3 (tightened filter): verdict={result.verdict} "
           "(Unknown — proving INEQUIVALENCE needs a whole-pair-capable EV, "
           "and this pair has a classifier)")
     print("engine shows they differ:", not sink_results_equal(v2, v3, {"tweets": tweets}))

@@ -1,0 +1,55 @@
+"""The unified public verification API.
+
+One import surface for everything a verification caller needs:
+
+  * ``EVRegistry`` / ``default_registry`` — named EV plugins with
+    capability metadata (fragment, monotonicity, inequivalence power);
+  * ``VeerConfig`` — validated, serializable verifier description with
+    ``build() -> Veer``;
+  * ``verify`` — the facade: verdict + stats + replayable certificate;
+  * ``Certificate`` / ``ReplayReport`` — machine-checkable evidence behind
+    every True/False verdict (``replay`` re-checks with fresh EVs, JSON
+    round-trips for cross-session audit).
+
+The chain service (``repro.service``) and reuse manager (``repro.reuse``)
+are built on this surface; old entry points (``make_veer_plus``,
+``repro.core.ev.default_evs``) remain as thin shims.
+"""
+
+from repro.api.certificate import (
+    Certificate,
+    CertificateFormatError,
+    ReplayFailure,
+    ReplayReport,
+    WindowRecord,
+    certificate_from_evidence,
+    pair_digest,
+    tampered,
+)
+from repro.api.config import ConfigError, VeerConfig
+from repro.api.facade import VerificationResult, verify
+from repro.api.registry import (
+    DEFAULT_EV_NAMES,
+    EVRegistry,
+    EVSpec,
+    default_registry,
+)
+
+__all__ = [
+    "Certificate",
+    "CertificateFormatError",
+    "ConfigError",
+    "DEFAULT_EV_NAMES",
+    "EVRegistry",
+    "EVSpec",
+    "ReplayFailure",
+    "ReplayReport",
+    "VeerConfig",
+    "VerificationResult",
+    "WindowRecord",
+    "certificate_from_evidence",
+    "default_registry",
+    "pair_digest",
+    "tampered",
+    "verify",
+]

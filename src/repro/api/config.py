@@ -1,0 +1,143 @@
+"""``VeerConfig`` — one validated, serializable object describing a verifier.
+
+Replaces the ``Veer(...)``-vs-``make_veer_plus(**kw)`` split: callers say
+*what* they want (EV names, optimization flags, budgets, cache location,
+semantics) and ``build()`` wires the actual ``Veer`` — EVs resolved through
+an ``EVRegistry``, the verdict cache attached.  Because the config is plain
+data it travels: log it next to a benchmark row, ship it to a worker, store
+it beside a certificate, rebuild the identical verifier anywhere.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+from repro.api.registry import DEFAULT_EV_NAMES, EVRegistry, default_registry
+from repro.core import dag as D
+from repro.core.ev.cache import VerdictCache
+from repro.core.verifier import Veer
+
+_FLAG_FIELDS = (
+    "segmentation",
+    "pruning",
+    "ranking",
+    "fast_inequivalence",
+    "relaxed_expansion",
+    "eager_verify",
+    "try_all_mappings",
+)
+_BUDGET_FIELDS = ("max_decompositions", "max_windows", "mapping_limit")
+
+
+class ConfigError(ValueError):
+    """An invalid ``VeerConfig`` (unknown EV, bad budget, bad semantics)."""
+
+
+@dataclass(frozen=True)
+class VeerConfig:
+    """Declarative verifier description.  The default is Veer⁺ (§7 + §8
+    optimizations on), the recommended production setting; ``baseline()``
+    gives the paper's unoptimized Veer for ablations."""
+
+    evs: Tuple[str, ...] = DEFAULT_EV_NAMES
+    # §7/§8 optimization flags (Veer⁺ defaults)
+    segmentation: bool = True
+    pruning: bool = True
+    ranking: bool = True
+    fast_inequivalence: bool = True
+    relaxed_expansion: bool = False
+    eager_verify: bool = True
+    try_all_mappings: bool = True
+    # search budgets
+    max_decompositions: int = 50_000
+    max_windows: int = 200_000
+    mapping_limit: int = 8
+    # environment
+    semantics: str = D.BAG
+    cache_path: Optional[str] = None
+
+    # -- presets -------------------------------------------------------------
+    @staticmethod
+    def plus(**overrides: Any) -> "VeerConfig":
+        """Veer⁺ — all optimizations on (same as the bare default)."""
+        return VeerConfig(**overrides)
+
+    @staticmethod
+    def baseline(**overrides: Any) -> "VeerConfig":
+        """The paper's unoptimized Veer (Algorithms 1-3, no §7 flags)."""
+        base = dict.fromkeys(_FLAG_FIELDS, False)
+        base.update(overrides)
+        return VeerConfig(**base)
+
+    def replace(self, **changes: Any) -> "VeerConfig":
+        return dataclasses.replace(self, **changes)
+
+    # -- validation ----------------------------------------------------------
+    def validate(self, registry: Optional[EVRegistry] = None) -> "VeerConfig":
+        registry = registry if registry is not None else default_registry()
+        if not self.evs:
+            raise ConfigError("config selects no EVs")
+        unknown = [n for n in self.evs if n not in registry]
+        if unknown:
+            raise ConfigError(
+                f"unknown EVs {unknown}; registered: {sorted(registry.names())}"
+            )
+        if len(set(self.evs)) != len(self.evs):
+            raise ConfigError(f"duplicate EV names in {self.evs}")
+        for f in _BUDGET_FIELDS:
+            v = getattr(self, f)
+            if not isinstance(v, int) or v <= 0:
+                raise ConfigError(f"{f} must be a positive int, got {v!r}")
+        if self.semantics not in (D.SET, D.BAG, D.ORDERED):
+            raise ConfigError(f"bad semantics {self.semantics!r}")
+        return self
+
+    # -- construction --------------------------------------------------------
+    def build(
+        self,
+        registry: Optional[EVRegistry] = None,
+        *,
+        cache: Optional[VerdictCache] = None,
+    ) -> Veer:
+        """A ready ``Veer``: EVs resolved by name, verdict cache attached.
+
+        An explicit ``cache`` wins over ``cache_path`` (so many verifiers can
+        share one in-memory store); with neither, the verifier runs uncached.
+        """
+        registry = registry if registry is not None else default_registry()
+        self.validate(registry)
+        if cache is None and self.cache_path is not None:
+            cache = VerdictCache(self.cache_path)
+        return Veer(
+            registry.build(list(self.evs)),
+            **{f: getattr(self, f) for f in _FLAG_FIELDS},
+            **{f: getattr(self, f) for f in _BUDGET_FIELDS},
+            verdict_cache=cache,
+        )
+
+    # -- serialization -------------------------------------------------------
+    def to_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["evs"] = list(self.evs)
+        return d
+
+    @staticmethod
+    def from_dict(d: Dict[str, Any]) -> "VeerConfig":
+        known = {f.name for f in dataclasses.fields(VeerConfig)}
+        unknown = set(d) - known
+        if unknown:
+            raise ConfigError(f"unknown config fields {sorted(unknown)}")
+        d = dict(d)
+        if "evs" in d:
+            d["evs"] = tuple(d["evs"])
+        return VeerConfig(**d)
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), sort_keys=True)
+
+    @staticmethod
+    def from_json(s: str) -> "VeerConfig":
+        return VeerConfig.from_dict(json.loads(s))

@@ -6,12 +6,13 @@ from repro.core.ev.jaxpr_ev import JaxprEV
 
 
 def default_evs(include_jaxpr: bool = True):
-    """The canonical EV roster (paper §8 multi-EV setup + the JAX-native
-    EV).  Single source of truth for benchmarks and the service layer."""
-    evs = [EquitasEV(), SpesEV(), UDPEV()]
-    if include_jaxpr:
-        evs.append(JaxprEV())
-    return evs
+    """Deprecated shim: the canonical roster now lives in
+    ``repro.api.registry`` (``default_registry()``/``DEFAULT_EV_NAMES``);
+    this keeps old imports working.  Lazy import avoids a core ↔ api cycle."""
+    from repro.api.registry import DEFAULT_EV_NAMES, default_registry
+
+    names = [n for n in DEFAULT_EV_NAMES if include_jaxpr or n != "jaxpr"]
+    return default_registry().build(names)
 
 
 __all__ = [

@@ -27,9 +27,70 @@ from repro.core.ev.base import BaseEV, QueryPair
 from repro.core.ev.cache import CachedEV, VerdictCache, wrap_evs
 from repro.core.ranking import decomposition_score, segment_score
 from repro.core.symbolic import quick_inequivalent
-from repro.core.window import Change, VersionPair
+from repro.core.window import Change, VersionPair, identical_under_mapping
 
 TRUE, FALSE, UNKNOWN = True, False, None
+
+
+@dataclass
+class WindowEvidence:
+    """How one window of the winning decomposition was decided.
+
+    ``kind`` is ``"ev"`` (an EV call — possibly answered by the verdict
+    cache or adopted from an isomorphic in-pair window; either way the named
+    EV is the one whose verdict stands) or ``"identical"`` (the Lemma 5.3
+    CASE1 structural shortcut — no EV involved).  ``query_pair`` /
+    ``identity_payload`` carry everything a certificate needs to re-check
+    the window without re-running the search.
+    """
+
+    units: Tuple[int, ...]
+    kind: str                               # "ev" | "identical"
+    verdict: Optional[bool]
+    ev_name: Optional[str] = None
+    fingerprint: Optional[str] = None
+    query_pair: Optional[QueryPair] = None
+    identity_payload: Optional[Dict[str, object]] = None
+
+
+@dataclass
+class VerificationEvidence:
+    """Raw, non-serialized proof material backing a True/False verdict.
+
+    ``kind``:
+      * ``"exact"``          — no changes under the mapping (Alg 2 lines 1-2);
+      * ``"decomposition"``  — every window of a covering decomposition
+                               verified (Lemma 5.3 / Theorem 5.8 True side);
+      * ``"witness"``        — an inequivalence-capable EV refuted a window
+                               spanning the entire pair (Theorem 5.8 False);
+      * ``"symbolic"``       — the §7.4 fast-inequivalence witness.
+
+    ``repro.api.certificate`` turns this into a serializable, replayable
+    ``Certificate``; core keeps only live objects.
+    """
+
+    kind: str
+    verdict: Optional[bool]
+    semantics: str
+    mapping: EditMapping
+    windows: List[WindowEvidence] = field(default_factory=list)
+    # the verified versions themselves — lets the certificate layer bind the
+    # evidence to this specific pair (digest + window/coverage re-derivation)
+    P: Optional[DataflowDAG] = None
+    Q: Optional[DataflowDAG] = None
+    n_units: int = 0
+    # symbolic-witness payload (whole-pair inequivalence, §7.4)
+    sink_pairs: Tuple[Tuple[str, str], ...] = ()
+
+
+class _EvidenceCollector:
+    """Per-mapping scratchpad the search paths tag as they conclude."""
+
+    def __init__(self) -> None:
+        self.kind: Optional[str] = None
+        self.pair: Optional[VersionPair] = None
+        self.ctx: Optional["_SearchContext"] = None
+        self.sink_pairs: Tuple[Tuple[str, str], ...] = ()
 
 
 @dataclass
@@ -104,6 +165,30 @@ class Veer:
         mapping: Optional[EditMapping] = None,
         semantics: str = D.BAG,
     ) -> Tuple[Optional[bool], VeerStats]:
+        verdict, stats, _ = self._verify(P, Q, mapping, semantics, collect=False)
+        return verdict, stats
+
+    def verify_with_evidence(
+        self,
+        P: DataflowDAG,
+        Q: DataflowDAG,
+        mapping: Optional[EditMapping] = None,
+        semantics: str = D.BAG,
+    ) -> Tuple[Optional[bool], VeerStats, Optional[VerificationEvidence]]:
+        """Like ``verify`` but additionally returns the proof material behind
+        a True/False verdict (None for Unknown) — the chosen mapping, the
+        covering decomposition, and per-window provenance.  This is the hook
+        ``repro.api`` builds replayable ``Certificate``s from."""
+        return self._verify(P, Q, mapping, semantics, collect=True)
+
+    def _verify(
+        self,
+        P: DataflowDAG,
+        Q: DataflowDAG,
+        mapping: Optional[EditMapping],
+        semantics: str,
+        collect: bool,
+    ) -> Tuple[Optional[bool], VeerStats, Optional[VerificationEvidence]]:
         t0 = time.perf_counter()
         stats = VeerStats()
         mappings = (
@@ -116,22 +201,35 @@ class Veer:
             )
         )
         verdict: Optional[bool] = UNKNOWN
+        evidence: Optional[VerificationEvidence] = None
         for m in mappings:
             stats.mappings_tried += 1
             try:
                 pair = VersionPair(P, Q, m, semantics)
             except (D.DAGError, ValueError):
                 continue
-            verdict = self._verify_pair(pair, stats)
+            coll = _EvidenceCollector()
+            coll.pair = pair
+            verdict = self._verify_pair(pair, stats, coll)
             if verdict is not UNKNOWN:
+                if collect:
+                    evidence = _assemble_evidence(verdict, coll)
                 break
         stats.total_time = time.perf_counter() - t0
         stats.verdict = verdict
-        return verdict, stats
+        return verdict, stats, evidence
 
     # ------------------------------------------------------------ per mapping
-    def _verify_pair(self, pair: VersionPair, stats: VeerStats) -> Optional[bool]:
+    def _verify_pair(
+        self,
+        pair: VersionPair,
+        stats: VeerStats,
+        coll: Optional[_EvidenceCollector] = None,
+    ) -> Optional[bool]:
+        coll = coll if coll is not None else _EvidenceCollector()
+        coll.pair = pair
         if not pair.changes:
+            coll.kind = "exact"
             return TRUE  # exact match (Alg 2 lines 1-2)
 
         sink_pairs = self._version_sink_pairs(pair)
@@ -140,9 +238,12 @@ class Veer:
             pair.P, pair.Q, sink_pairs, pair.semantics
         ):
             stats.fast_inequivalence_hit = True
+            coll.kind = "symbolic"
+            coll.sink_pairs = tuple(sink_pairs)
             return FALSE
 
         ctx = _SearchContext(pair, self.evs, stats, self.verdict_cache)
+        coll.ctx = ctx
 
         if self.segmentation:
             segments = self._segment(pair, ctx)
@@ -159,12 +260,19 @@ class Veer:
                 if r is TRUE:
                     continue  # Alg 3: next segment
                 if r is FALSE and whole:
+                    coll.kind = "witness"
                     return FALSE
                 return UNKNOWN  # early termination (Alg 3 line 5)
+            coll.kind = "decomposition"
             return TRUE
 
         universe = frozenset(range(len(pair.units)))
-        return self._algorithm2(ctx, universe, pair.changes)
+        r = self._algorithm2(ctx, universe, pair.changes)
+        if r is TRUE:
+            coll.kind = "decomposition"
+        elif r is FALSE:
+            coll.kind = "witness"
+        return r
 
     def _version_sink_pairs(self, pair: VersionPair) -> List[Tuple[str, str]]:
         fwd = pair.mapping.forward
@@ -320,6 +428,7 @@ class Veer:
             if all_marked and doomed and len(windows) == 1 and windows[0] == entire_pair:
                 # Alg 2 line 19: whole-pair window refuted by a capable EV
                 if ctx.window_verdict(windows[0]) is FALSE:
+                    ctx.witness = windows[0]
                     stats.explore_time += time.perf_counter() - t_explore
                     return FALSE
 
@@ -358,7 +467,7 @@ class Veer:
             v = ctx.window_verdict(w)
             resolved += 1
             for w2 in adopt.get(w, ()):
-                ctx.adopt_verdict(w2, v)
+                ctx.adopt_verdict(w2, v, rep=w)
                 resolved += 1
             if v is not TRUE:
                 if (
@@ -367,9 +476,13 @@ class Veer:
                     and windows[0] == entire_pair
                     and v is FALSE
                 ):
+                    ctx.witness = windows[0]
                     return FALSE  # inequivalence-capable EV refuted the pair
                 return UNKNOWN
-        return TRUE if resolved == len(windows) else UNKNOWN
+        if resolved == len(windows):
+            ctx.proof.extend(windows)
+            return TRUE
+        return UNKNOWN
 
     # ------------------------------------------------------------- Algorithm 1
     def verify_single_edit(
@@ -429,8 +542,10 @@ class Veer:
                 mcws.append(w)
                 v = ctx.window_verdict(w)
                 if v is TRUE:
+                    ctx.proof.append(w)
                     return TRUE, mcws
                 if v is FALSE and w == universe:
+                    ctx.witness = w
                     return FALSE, mcws
         return verdict, mcws
 
@@ -475,6 +590,12 @@ class _SearchContext:
         self._valid: Dict[FrozenSet[int], Tuple[int, ...]] = {}
         self._verdict: Dict[FrozenSet[int], Optional[bool]] = {}
         self.dead: Set[FrozenSet[int]] = set()
+        # evidence trail: which window was decided how ("identical" or the
+        # deciding EV's name), the windows of the accepted decomposition(s),
+        # and the refuting whole-pair window if the verdict is False
+        self.provenance: Dict[FrozenSet[int], Tuple[str, Optional[str]]] = {}
+        self.proof: List[FrozenSet[int]] = []
+        self.witness: Optional[FrozenSet[int]] = None
 
     def query_pair(self, win: FrozenSet[int]) -> Optional[QueryPair]:
         return self.pair.to_query_pair(win)
@@ -518,12 +639,21 @@ class _SearchContext:
                 fresh.append(w)
         return memoized + covered + fresh + plain, adopt
 
-    def adopt_verdict(self, win: FrozenSet[int], v: Optional[bool]) -> None:
+    def adopt_verdict(
+        self,
+        win: FrozenSet[int],
+        v: Optional[bool],
+        rep: Optional[FrozenSet[int]] = None,
+    ) -> None:
         """Record a verdict obtained from an isomorphic window — sound
-        because fingerprint equality implies the EVs would answer the same."""
+        because fingerprint equality implies the EVs would answer the same.
+        Provenance is inherited from the representative: the named EV's
+        verdict stands for this window too (same fingerprint)."""
         if win in self._verdict:
             return
         self._verdict[win] = v
+        if rep is not None and rep in self.provenance:
+            self.provenance[win] = self.provenance[rep]
         self.stats.windows_verified += 1
         self.stats.windows_deduped += 1
         self.stats.ev_calls_saved += 1
@@ -551,6 +681,7 @@ class _SearchContext:
         v: Optional[bool] = UNKNOWN
         if self._identical(win):
             v = TRUE
+            self.provenance[win] = ("identical", None)
         else:
             qp = self.query_pair(win)
             if qp is not None:
@@ -572,9 +703,15 @@ class _SearchContext:
                         self.stats.ev_time += dt
                     if r is True:
                         v = TRUE
+                        self.provenance[win] = ("ev", ev.name)
                         break
                     if r is False and ev.can_prove_inequivalence:
+                        # a capable EV's refutation is a proof (Thm 5.8):
+                        # stop — running more EVs wastes calls, and a buggy
+                        # later True must not overwrite a sound False
                         v = FALSE
+                        self.provenance[win] = ("ev", ev.name)
+                        break
         self.stats.windows_verified += 1
         self._verdict[win] = v
         return v
@@ -582,38 +719,112 @@ class _SearchContext:
     def _identical(self, win: FrozenSet[int]) -> bool:
         """Both sub-DAGs structurally identical under the mapping."""
         pair = self.pair
-        fwd = pair.mapping.forward
         p_ops = pair.p_ops(win)
         q_ops = pair.q_ops(win)
         if len(p_ops) != len(win) or len(q_ops) != len(win):
             return False  # contains an inserted/deleted op
-        for p in p_ops:
-            q = fwd.get(p)
-            if q is None or q not in q_ops:
-                return False
-            if pair.P.ops[p].signature() != pair.Q.ops[q].signature():
-                return False
-        # every link feeding a window op must correspond INCLUDING its port —
-        # internal links and boundary in-links alike (a swapped Join/Union
-        # input wiring is not "identical" even when the op sets match)
-        p_links = {
-            (l.src, l.dst, l.dst_port)
-            for l in pair.P.links
-            if l.dst in p_ops
-        }
-        q_links = {
-            (l.src, l.dst, l.dst_port)
-            for l in pair.Q.links
-            if l.dst in q_ops
-        }
-        if any(s not in fwd for s, _, _ in p_links):
-            return False
-        mapped = {(fwd[s], fwd[d], pt) for s, d, pt in p_links}
-        return mapped == q_links
+        return identical_under_mapping(
+            {p: pair.P.ops[p] for p in p_ops},
+            {q: pair.Q.ops[q] for q in q_ops},
+            [(l.src, l.dst, l.dst_port) for l in pair.P.links if l.dst in p_ops],
+            [(l.src, l.dst, l.dst_port) for l in pair.Q.links if l.dst in q_ops],
+            pair.mapping.forward,
+        )
 
 
 def _decomp_key(windows: Tuple[FrozenSet[int], ...]) -> Tuple:
     return tuple(tuple(sorted(w)) for w in windows)
+
+
+def _identity_payload(
+    pair: VersionPair, win: Optional[FrozenSet[int]]
+) -> Dict[str, object]:
+    """Everything ``identical_under_mapping`` needs, as plain structures —
+    ``win=None`` means the whole pair (the exact-match certificate)."""
+    fwd = pair.mapping.forward
+    if win is None:
+        p_ops = set(pair.P.ops)
+        q_ops = set(pair.Q.ops)
+    else:
+        p_ops = pair.p_ops(win)
+        q_ops = pair.q_ops(win)
+    p_links = [
+        (l.src, l.dst, l.dst_port) for l in pair.P.links if l.dst in p_ops
+    ]
+    q_links = [
+        (l.src, l.dst, l.dst_port) for l in pair.Q.links if l.dst in q_ops
+    ]
+    needed = p_ops | {s for s, _, _ in p_links}
+    return {
+        "p_ops": {p: pair.P.ops[p] for p in p_ops},
+        "q_ops": {q: pair.Q.ops[q] for q in q_ops},
+        "p_links": p_links,
+        "q_links": q_links,
+        "forward": {p: fwd[p] for p in needed if p in fwd},
+    }
+
+
+def _window_evidence(
+    ctx: "_SearchContext", win: FrozenSet[int]
+) -> WindowEvidence:
+    kind, ev_name = ctx.provenance.get(win, ("identical", None))
+    verdict = ctx._verdict.get(win)
+    if kind == "identical":
+        return WindowEvidence(
+            units=tuple(sorted(win)),
+            kind="identical",
+            verdict=verdict,
+            identity_payload=_identity_payload(ctx.pair, win),
+        )
+    return WindowEvidence(
+        units=tuple(sorted(win)),
+        kind="ev",
+        verdict=verdict,
+        ev_name=ev_name,
+        fingerprint=ctx.pair.window_fingerprint(win),
+        query_pair=ctx.pair.to_query_pair(win),
+    )
+
+
+def _assemble_evidence(
+    verdict: Optional[bool], coll: _EvidenceCollector
+) -> Optional[VerificationEvidence]:
+    """Turn the search's scratchpad into a ``VerificationEvidence`` (only
+    called once a mapping produced a True/False verdict)."""
+    pair = coll.pair
+    if pair is None or coll.kind is None:
+        return None
+    ev = VerificationEvidence(
+        kind=coll.kind,
+        verdict=verdict,
+        semantics=pair.semantics,
+        mapping=pair.mapping,
+        P=pair.P,
+        Q=pair.Q,
+        n_units=len(pair.units),
+    )
+    if coll.kind == "exact":
+        ev.windows.append(
+            WindowEvidence(
+                units=(),
+                kind="identical",
+                verdict=TRUE,
+                identity_payload=_identity_payload(pair, None),
+            )
+        )
+    elif coll.kind == "symbolic":
+        ev.sink_pairs = coll.sink_pairs
+    elif coll.kind == "decomposition" and coll.ctx is not None:
+        seen: Set[FrozenSet[int]] = set()
+        for win in coll.ctx.proof:
+            if win in seen:
+                continue
+            seen.add(win)
+            ev.windows.append(_window_evidence(coll.ctx, win))
+    elif coll.kind == "witness" and coll.ctx is not None:
+        if coll.ctx.witness is not None:
+            ev.windows.append(_window_evidence(coll.ctx, coll.ctx.witness))
+    return ev
 
 
 def make_veer_plus(evs: Sequence[BaseEV], **kw) -> Veer:

@@ -464,6 +464,47 @@ class VersionPair:
         return sub
 
 
+def identical_under_mapping(
+    p_ops: Mapping[str, Operator],
+    q_ops: Mapping[str, Operator],
+    p_links: Sequence[Tuple[str, str, int]],
+    q_links: Sequence[Tuple[str, str, int]],
+    forward: Mapping[str, str],
+) -> bool:
+    """Structural identity of two mapped operator sets (Lemma 5.3 CASE1).
+
+    ``p_links``/``q_links`` are the ``(src, dst, dst_port)`` triples of every
+    link *feeding* an operator of the respective set — internal links and
+    in-boundary links alike (``src`` may lie outside the set; ``forward``
+    must still map it).  A swapped Join/Union input wiring is not
+    "identical" even when the op sets match, hence the port in the key.
+
+    Shared between the verifier's window shortcut and certificate replay:
+    the certificate serializes exactly these inputs, so replaying an
+    "identical" window record re-runs this check from first principles.
+    """
+    if len(p_ops) != len(q_ops):
+        return False
+    q_ids = set(q_ops)
+    matched = set()
+    for p_id, p_op in p_ops.items():
+        q_id = forward.get(p_id)
+        if q_id is None or q_id not in q_ids:
+            return False
+        if p_op.signature() != q_ops[q_id].signature():
+            return False
+        matched.add(q_id)
+    if matched != q_ids:
+        # the map must be a bijection between the two sets: a non-injective
+        # forward (possible in attacker-controlled certificate payloads)
+        # would leave unmatched q-side operators completely unexamined
+        return False
+    if any(s not in forward for s, _, _ in p_links):
+        return False
+    mapped = {(forward[s], forward[d], pt) for s, d, pt in p_links}
+    return mapped == {tuple(l) for l in q_links}
+
+
 def _edit_label(e) -> str:
     if isinstance(e, AddOperator):
         return f"+{e.op.id}"

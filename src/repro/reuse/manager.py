@@ -6,6 +6,11 @@ already-executed version's sink via Veer; verified sinks are served from
 the content-addressed store instead of recomputed.  The store is shared
 with checkpointing (same hashing scheme), so equivalent results are stored
 once (Use case 2: no periodic de-duplication pass needed).
+
+Built on the ``repro.api`` surface: construct with ``config=VeerConfig``
+(EVs by name), and every reuse decision is recorded with its replayable
+``Certificate`` in ``self.certificates`` — serving a cached result is the
+verdict that most needs an audit trail.
 """
 
 from __future__ import annotations
@@ -19,6 +24,9 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.api.certificate import Certificate, certificate_from_evidence
+from repro.api.config import VeerConfig
+from repro.api.registry import EVRegistry
 from repro.core.dag import DataflowDAG
 from repro.core.edits import identity_mapping
 from repro.core.ev.cache import VerdictCache
@@ -37,6 +45,7 @@ class ReuseStats:
     execute_time: float = 0.0
     dedup_skipped_writes: int = 0
     verdict_cache_hits: int = 0
+    certified_reuses: int = 0   # reuse decisions backed by a replayable cert
 
 
 @dataclass
@@ -100,11 +109,26 @@ class ReuseManager:
     def __init__(
         self,
         directory: str,
-        veer: Veer,
+        veer: Optional[Veer] = None,
         *,
-        semantics: str = "bag",
+        config: Optional[VeerConfig] = None,
+        registry: Optional[EVRegistry] = None,
+        semantics: Optional[str] = None,
         verdict_cache: Optional[VerdictCache] = None,
     ):
+        """Preferred construction: ``config=VeerConfig(...)`` (the
+        ``repro.api`` surface); passing a pre-built ``veer`` remains
+        supported for older callers.  Reuse decisions carry replayable
+        certificates (``self.certificates``) — serving a stored result is
+        exactly the kind of verdict an auditor wants evidence for."""
+        if veer is not None and config is not None:
+            raise ValueError("pass either veer or config, not both")
+        if veer is None:
+            config = config if config is not None else VeerConfig()
+            veer = config.build(registry)
+        if semantics is None:
+            semantics = config.semantics if config is not None else "bag"
+        self.config = config
         self.store = MaterializationStore(directory)
         # EV verdicts live next to the materializations: one content-addressed
         # directory of reusable artifacts, shared across sessions (and with
@@ -124,6 +148,9 @@ class ReuseManager:
         self.semantics = semantics
         self.versions: List[_Version] = []
         self.stats = ReuseStats()
+        # certificate per reuse decision: (new version index, matched
+        # version id, Certificate) — the audit trail for served results
+        self.certificates: List[Tuple[int, int, Certificate]] = []
 
     def submit(
         self, dag: DataflowDAG, sources: Dict[str, Table]
@@ -139,19 +166,29 @@ class ReuseManager:
             if not remaining:
                 break
             t0 = time.perf_counter()
-            verdict, vstats = self.veer.verify(
+            verdict, vstats, evidence = self.veer.verify_with_evidence(
                 prev.dag, dag, semantics=self.semantics
             )
             self.stats.verify_time += time.perf_counter() - t0
             self.stats.verdict_cache_hits += vstats.cache_hits
             if verdict is True:
                 mapping = identity_mapping(prev.dag, dag).forward
+                served = 0
                 for psink, digest in prev.sink_objects.items():
                     qsink = mapping.get(psink)
                     if qsink in remaining:
                         results[qsink] = self.store.get(digest)
                         remaining.discard(qsink)
                         self.stats.sink_hits += 1
+                        served += 1
+                if served:
+                    # only decisions that actually served a result enter the
+                    # audit trail — an equivalent version whose sinks were
+                    # already covered reused nothing
+                    cert = certificate_from_evidence(evidence)
+                    if cert is not None:
+                        self.certificates.append((len(self.versions), prev.vid, cert))
+                        self.stats.certified_reuses += 1
 
         if remaining:
             t0 = time.perf_counter()

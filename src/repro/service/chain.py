@@ -9,11 +9,21 @@ earlier pair — or persisted by an earlier session — resolves without an EV
 call.  This is the GEqO/EqDAC observation (cache and share semantic
 equivalence sub-results) applied to Veer's windowed decomposition search.
 
+Every decided pair carries a replayable ``repro.api.Certificate`` — cached
+cross-session verdicts are auditable evidence, not trust-me (see
+``repro.api.certificate``); ``ChainReport.summary()`` shows which pairs are
+certificate-backed.
+
 Typical use::
 
-    session = VersionChainSession(cache_path="~/.veer/verdicts.json")
+    from repro.api import VeerConfig
+
+    session = VersionChainSession(
+        config=VeerConfig(cache_path="~/.veer/verdicts.json")
+    )
     session.submit(v1)                  # first version: nothing to verify
     report = session.submit(v2)         # verifies (v1, v2)
+    report.certificate.replay()         # audit the verdict, no search
     report = session.submit(v3)         # verifies (v2, v3), reusing verdicts
     print(session.report().summary())
     session.save()                      # persist verdicts for the next session
@@ -25,22 +35,20 @@ or, batch-style::
 
 from __future__ import annotations
 
+import dataclasses
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence
 
+from repro.api.certificate import Certificate, certificate_from_evidence
+from repro.api.config import VeerConfig
+from repro.api.registry import EVRegistry
 from repro.core import dag as D
 from repro.core.dag import DataflowDAG
 from repro.core.edits import EditMapping
 from repro.core.ev.base import BaseEV
 from repro.core.ev.cache import VerdictCache
 from repro.core.verifier import Veer, VeerStats, make_veer_plus
-
-
-def _default_evs() -> List[BaseEV]:
-    from repro.core.ev import default_evs
-
-    return default_evs()
 
 
 @dataclass
@@ -51,6 +59,15 @@ class PairReport:
     verdict: Optional[bool]         # True / False / None (Unknown)
     wall_time: float
     stats: VeerStats
+    certificate: Optional[Certificate] = None
+    # whether the verdict WAS certificate-backed — stays True even when a
+    # session with keep_certificates=False drops the payload after returning
+    # it to the submit caller
+    certified: bool = False
+
+    def __post_init__(self) -> None:
+        if self.certificate is not None:
+            self.certified = True
 
     @property
     def equivalent(self) -> bool:
@@ -70,8 +87,9 @@ class PairReport:
 
     def row(self) -> str:
         v = {True: "EQ", False: "NEQ", None: "UNK"}[self.verdict]
+        cert = "cert" if self.certified else "----"
         return (
-            f"pair {self.index:>3}: {v:>3}  ev_calls={self.ev_calls:<4} "
+            f"pair {self.index:>3}: {v:>3}  {cert}  ev_calls={self.ev_calls:<4} "
             f"cache_hits={self.cache_hits:<4} saved={self.ev_calls_saved:<4} "
             f"{self.wall_time * 1e3:8.1f} ms"
         )
@@ -103,10 +121,23 @@ class ChainReport:
     def verdicts(self) -> List[Optional[bool]]:
         return [p.verdict for p in self.pairs]
 
+    @property
+    def certified_pairs(self) -> int:
+        return sum(1 for p in self.pairs if p.certified)
+
+    @property
+    def certified_fraction(self) -> float:
+        """Share of *decided* (True/False) pairs backed by a certificate."""
+        decided = [p for p in self.pairs if p.verdict is not None]
+        if not decided:
+            return 0.0
+        return sum(1 for p in decided if p.certified) / len(decided)
+
     def summary(self) -> str:
         lines = [p.row() for p in self.pairs]
         lines.append(
             f"chain: {len(self.pairs)} pairs, "
+            f"{self.certified_pairs} certificate-backed, "
             f"{self.total_ev_calls} EV calls, "
             f"{self.total_cache_hits} cache hits, "
             f"{self.total_ev_calls_saved} calls saved, "
@@ -128,25 +159,55 @@ class VersionChainSession:
         self,
         evs: Optional[Sequence[BaseEV]] = None,
         *,
+        config: Optional[VeerConfig] = None,
+        registry: Optional[EVRegistry] = None,
         cache: Optional[VerdictCache] = None,
         cache_path: Optional[str] = None,
-        semantics: str = D.BAG,
+        semantics: Optional[str] = None,
         veer: Optional[Veer] = None,
+        keep_certificates: bool = True,
         **veer_kw,
     ):
-        if cache is None:
-            cache = VerdictCache(cache_path)
-        elif cache_path is not None:
-            raise ValueError("pass either cache or cache_path, not both")
-        self.cache = cache
-        if veer is None:
-            veer = make_veer_plus(
-                list(evs) if evs is not None else _default_evs(), **veer_kw
-            )
-        elif evs is not None or veer_kw:
+        """The preferred construction path is ``config=VeerConfig(...)``
+        (EVs by name, resolved through ``registry``); ``evs``/``veer`` and
+        ``**veer_kw`` remain as deprecated shims for pre-``repro.api``
+        callers.  Cache precedence: explicit ``cache`` > ``cache_path`` >
+        ``config.cache_path`` > in-memory.
+
+        ``keep_certificates=False`` drops certificate payloads from the
+        session-lifetime report after each ``submit`` returns (the caller
+        still receives the full certificate; ``PairReport.certified`` stays
+        truthful) — for very long monitoring sessions whose report must not
+        accumulate per-pair window payloads."""
+        if config is not None and (evs is not None or veer is not None or veer_kw):
+            raise ValueError("pass either config or evs/veer/veer_kw, not both")
+        if veer is not None and (evs is not None or veer_kw):
             raise ValueError("pass either veer or evs/veer_kw, not both")
+        if cache is not None and cache_path is not None:
+            raise ValueError("pass either cache or cache_path, not both")
+        if config is None and evs is None and veer is None and not veer_kw:
+            config = VeerConfig()
+        if cache is None:
+            path = cache_path if cache_path is not None else (
+                config.cache_path if config is not None else None
+            )
+            cache = VerdictCache(path)
+        self.cache = cache
+        self.config = config
+        if config is not None:
+            veer = config.build(registry, cache=cache)
+        elif veer is None:
+            # deprecated path: explicit EV instances and/or raw Veer kwargs
+            # keep their pre-api semantics (forwarded to make_veer_plus)
+            from repro.api.registry import default_registry
+
+            evs = list(evs) if evs is not None else default_registry().build()
+            veer = make_veer_plus(evs, **veer_kw)
         self.veer = veer.attach_cache(cache)
+        if semantics is None:
+            semantics = config.semantics if config is not None else D.BAG
         self.semantics = semantics
+        self.keep_certificates = keep_certificates
         # only the previous version is needed for the next pair; a long-lived
         # session must not accumulate every DAG it ever saw
         self._prev: Optional[DataflowDAG] = None
@@ -172,7 +233,7 @@ class VersionChainSession:
         if prev is None:
             return None
         t0 = time.perf_counter()
-        verdict, stats = self.veer.verify(
+        verdict, stats, evidence = self.veer.verify_with_evidence(
             prev, version, mapping, semantics=self.semantics
         )
         report = PairReport(
@@ -180,8 +241,15 @@ class VersionChainSession:
             verdict=verdict,
             wall_time=time.perf_counter() - t0,
             stats=stats,
+            certificate=certificate_from_evidence(evidence),
         )
-        self._report.pairs.append(report)
+        if self.keep_certificates:
+            self._report.pairs.append(report)
+        else:
+            # keep the truthful certified flag, drop the heavy payload
+            self._report.pairs.append(
+                dataclasses.replace(report, certificate=None)
+            )
         return report
 
     def report(self) -> ChainReport:

@@ -1,0 +1,211 @@
+"""``EVRegistry`` and ``VeerConfig`` — the non-certificate half of
+``repro.api``: named EV plugins with capability metadata, and the validated,
+serializable verifier config that replaces ``make_veer_plus(**kw)`` wiring.
+"""
+
+import pytest
+
+from helpers import SCHEMA
+from repro.api import (
+    DEFAULT_EV_NAMES,
+    ConfigError,
+    EVRegistry,
+    VeerConfig,
+    default_registry,
+)
+from repro.core import dag as D
+from repro.core.dag import DataflowDAG, Link, Operator
+from repro.core.ev import default_evs
+from repro.core.ev.base import BaseEV
+from repro.core.ev.cache import VerdictCache
+from repro.core.predicates import Pred
+from repro.core.verifier import Veer
+
+op = Operator.make
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+def test_default_registry_has_canonical_roster():
+    reg = default_registry()
+    assert tuple(reg.names()) == DEFAULT_EV_NAMES
+    for name in DEFAULT_EV_NAMES:
+        spec = reg.spec(name)
+        ev = reg.create(name)
+        assert ev.name == name
+        # capability metadata mirrors the instance bits the verifier uses
+        assert spec.restriction_monotonic == ev.restriction_monotonic
+        assert spec.can_prove_inequivalence == ev.can_prove_inequivalence
+        assert spec.supported_op_types == frozenset(ev.supported_op_types)
+    assert "equitas" in reg.capability_table()
+
+
+def test_registry_build_returns_fresh_instances():
+    reg = default_registry()
+    a = reg.build(["spes"])[0]
+    b = reg.build(["spes"])[0]
+    assert a is not b
+
+
+def test_registry_unknown_name_errors_helpfully():
+    reg = default_registry()
+    with pytest.raises(KeyError, match="registered"):
+        reg.spec("cosette")
+    with pytest.raises(KeyError):
+        reg.build(["spes", "cosette"])
+
+
+def test_registry_duplicate_and_replace():
+    reg = default_registry().copy()
+
+    class ToyEV(BaseEV):
+        name = "spes"  # collides with the builtin
+
+        def validate(self, qp):
+            return False
+
+    with pytest.raises(ValueError, match="already registered"):
+        reg.register(ToyEV)
+    reg.register(ToyEV, replace=True)
+    assert isinstance(reg.create("spes"), ToyEV)
+    # the shared default registry is untouched (copy-on-customize)
+    assert not isinstance(default_registry().create("spes"), ToyEV)
+
+
+def test_registry_rejects_misnamed_factory():
+    reg = default_registry()
+    spec = reg.spec("spes")
+    import dataclasses
+
+    lying = dataclasses.replace(spec, name="udp")
+    with pytest.raises(ValueError, match="named"):
+        lying.create()
+
+
+def test_default_evs_shim_routes_through_registry():
+    names = [ev.name for ev in default_evs()]
+    assert tuple(names) == DEFAULT_EV_NAMES
+    assert [ev.name for ev in default_evs(include_jaxpr=False)] == [
+        n for n in DEFAULT_EV_NAMES if n != "jaxpr"
+    ]
+
+
+# ---------------------------------------------------------------------------
+# config
+# ---------------------------------------------------------------------------
+
+
+def test_config_build_produces_wired_veer(tmp_path):
+    cfg = VeerConfig(
+        evs=("equitas", "spes"),
+        max_decompositions=123,
+        cache_path=str(tmp_path / "v.json"),
+    )
+    veer = cfg.build()
+    assert isinstance(veer, Veer)
+    assert veer.max_decompositions == 123
+    assert veer.segmentation and veer.pruning  # Veer+ defaults
+    assert veer.verdict_cache is not None
+    assert [ev.name for ev in veer.evs] == ["equitas", "spes"]
+
+
+def test_config_baseline_preset_matches_bare_veer():
+    veer = VeerConfig.baseline(evs=("spes",)).build()
+    assert not any(
+        getattr(veer, f)
+        for f in ("segmentation", "pruning", "ranking", "fast_inequivalence",
+                  "eager_verify", "try_all_mappings")
+    )
+
+
+def test_config_validation_errors():
+    with pytest.raises(ConfigError, match="unknown EV"):
+        VeerConfig(evs=("nope",)).validate()
+    with pytest.raises(ConfigError, match="duplicate"):
+        VeerConfig(evs=("spes", "spes")).validate()
+    with pytest.raises(ConfigError, match="no EVs"):
+        VeerConfig(evs=()).validate()
+    with pytest.raises(ConfigError, match="positive"):
+        VeerConfig(max_decompositions=0).validate()
+    with pytest.raises(ConfigError, match="semantics"):
+        VeerConfig(semantics="fuzzy").validate()
+
+
+def test_config_json_round_trip():
+    cfg = VeerConfig(evs=("equitas", "udp"), ranking=False, mapping_limit=3)
+    restored = VeerConfig.from_json(cfg.to_json())
+    assert restored == cfg
+    with pytest.raises(ConfigError, match="unknown config fields"):
+        VeerConfig.from_dict({"evz": ["spes"]})
+
+
+def test_config_explicit_cache_wins_over_path(tmp_path):
+    cache = VerdictCache()
+    cfg = VeerConfig(evs=("spes",), cache_path=str(tmp_path / "v.json"))
+    veer = cfg.build(cache=cache)
+    assert veer.verdict_cache is cache
+
+
+def test_config_build_verifies_like_make_veer_plus():
+    P = DataflowDAG(
+        [op("s", D.SOURCE, schema=SCHEMA),
+         op("fa", D.FILTER, pred=Pred.cmp("a", ">", 2)),
+         op("fb", D.FILTER, pred=Pred.cmp("b", "<", 5)),
+         op("k", D.SINK, semantics=D.BAG)],
+        [Link("s", "fa"), Link("fa", "fb"), Link("fb", "k")],
+    )
+    Q = DataflowDAG(
+        list(P.ops.values()),
+        [Link("s", "fb"), Link("fb", "fa"), Link("fa", "k")],
+    )
+    from repro.core.verifier import make_veer_plus
+    from repro.core.ev import default_evs as evs
+
+    v1, _ = VeerConfig(evs=("equitas", "spes", "udp")).build().verify(P, Q)
+    v2, _ = make_veer_plus(evs(include_jaxpr=False)).verify(P, Q)
+    assert v1 is v2 is True
+
+
+def test_custom_ev_plugin_end_to_end():
+    """A registered toy EV is selectable by name through the whole stack."""
+
+    class YesEV(BaseEV):
+        name = "yes"
+        semantics = frozenset({D.SET, D.BAG, D.ORDERED})
+        restriction_monotonic = True
+        can_prove_inequivalence = False
+        supported_op_types = frozenset(
+            {D.SOURCE, D.FILTER, D.PROJECT, D.SINK, D.REPLICATE}
+        )
+
+        def validate(self, qp):
+            return all(
+                o.op_type in self.supported_op_types
+                for dag in (qp.P, qp.Q)
+                for o in dag.ops.values()
+            )
+
+        def check(self, qp):
+            return True  # unsound, but fine for plumbing tests
+
+    reg = default_registry().copy()
+    reg.register(YesEV, description="always-equivalent toy EV")
+    cfg = VeerConfig(evs=("yes",))
+    from repro.api import verify
+
+    P = DataflowDAG(
+        [op("s", D.SOURCE, schema=SCHEMA),
+         op("f", D.FILTER, pred=Pred.cmp("a", ">", 1)),
+         op("k", D.SINK, semantics=D.BAG)],
+        [Link("s", "f"), Link("f", "k")],
+    )
+    Q = P.replace_op(op("f", D.FILTER, pred=Pred.cmp("a", ">", 2)))
+    result = verify(P, Q, cfg, registry=reg)
+    assert result.verdict is True
+    assert result.certificate.ev_names == ("yes",)
+    assert result.certificate.replay(reg).ok
+    # replaying against a registry without the plugin fails loudly
+    assert not result.certificate.replay(default_registry()).ok

@@ -1,0 +1,409 @@
+"""Replayable verification certificates (``repro.api``).
+
+The certificate contract: every True/False verdict returned through
+``repro.api.verify`` (and the chain service / reuse manager built on it)
+carries machine-replayable evidence — replay re-checks each window with a
+fresh, uncached EV resolved by name; tampering with any record turns replay
+red; JSON round-trips preserve verdicts and replayability; and verdicts
+answered entirely from the ``VerdictCache`` still produce complete
+certificates (the auditable-cache property).
+"""
+
+import dataclasses
+
+import pytest
+
+from helpers import SCHEMA
+from repro.api import (
+    Certificate,
+    CertificateFormatError,
+    VeerConfig,
+    default_registry,
+    tampered,
+    verify,
+)
+from repro.core import dag as D
+from repro.core.dag import DataflowDAG, Link, Operator
+from repro.core.ev.cache import VerdictCache
+from repro.core.predicates import Pred
+from repro.service import VersionChainSession
+from repro.service.synthetic import make_chain
+
+op = Operator.make
+
+CFG = VeerConfig(evs=("equitas", "spes", "udp"))
+
+
+def _two_filter_pair(prefix="x", swap=True, a_thresh=2):
+    """P: src->fa->fb->sink ; Q: same with filters swapped (equivalent)."""
+
+    def build(order):
+        fa = op(f"{prefix}fa", D.FILTER, pred=Pred.cmp("a", ">", a_thresh))
+        fb = op(f"{prefix}fb", D.FILTER, pred=Pred.cmp("b", "<", 5))
+        path = [f"{prefix}src"] + [o.id for o in order(fa, fb)] + [f"{prefix}sink"]
+        return DataflowDAG(
+            [op(f"{prefix}src", D.SOURCE, schema=SCHEMA), fa, fb,
+             op(f"{prefix}sink", D.SINK, semantics=D.BAG)],
+            [Link(x, y) for x, y in zip(path, path[1:])],
+        )
+
+    P = build(lambda fa, fb: (fa, fb))
+    Q = build(lambda fa, fb: (fb, fa) if swap else (fa, fb))
+    return P, Q
+
+
+# ---------------------------------------------------------------------------
+# True verdicts: certificate present, replay green
+# ---------------------------------------------------------------------------
+
+
+def test_true_verdict_carries_replayable_certificate():
+    P, Q = _two_filter_pair()
+    result = verify(P, Q, CFG)
+    assert result.verdict is True and result.certified
+    cert = result.certificate
+    assert cert.kind == "decomposition"
+    assert cert.windows and all(w.verdict is True for w in cert.windows)
+    # per-window (fingerprint, ev_name, verdict) records
+    ev_recs = [w for w in cert.windows if w.kind == "ev"]
+    assert ev_recs and all(w.fingerprint and w.ev_name for w in ev_recs)
+    report = cert.replay()
+    assert report.ok and report.checked == len(cert.windows)
+
+
+def test_exact_match_certificate():
+    P, _ = _two_filter_pair()
+    result = verify(P, P, CFG)
+    assert result.verdict is True
+    assert result.certificate.kind == "exact"
+    assert result.certificate.replay().ok
+
+
+def test_false_verdict_carries_witness_certificate():
+    # tightened threshold, whole pair inside the Spes fragment: provable NEQ
+    P, _ = _two_filter_pair("z", swap=False)
+    Q = P.replace_op(op("zfa", D.FILTER, pred=Pred.cmp("a", ">", 4)))
+    result = verify(P, Q, CFG)
+    assert result.verdict is False and result.certified
+    cert = result.certificate
+    assert cert.kind in ("witness", "symbolic")
+    assert cert.replay().ok
+
+
+def test_symbolic_witness_certificate():
+    # dropping a projected column triggers the §7.4 symbolic witness
+    P = DataflowDAG(
+        [op("s", D.SOURCE, schema=SCHEMA),
+         op("p", D.PROJECT, cols=(("a", "a"), ("b", "b"))),
+         op("k", D.SINK, semantics=D.BAG)],
+        [Link("s", "p"), Link("p", "k")],
+    )
+    Q = P.replace_op(op("p", D.PROJECT, cols=(("a", "a"),)))
+    result = verify(P, Q, CFG)
+    assert result.verdict is False
+    assert result.certificate.kind == "symbolic"
+    assert result.certificate.replay().ok
+    # flipping the recorded verdict must be caught
+    bad = tampered(result.certificate)
+    assert not bad.replay().ok
+
+
+def test_unknown_verdict_has_no_certificate():
+    # classifier blocks inequivalence proof: Unknown, nothing to certify
+    P = DataflowDAG(
+        [op("s", D.SOURCE, schema=SCHEMA),
+         op("c", D.CLASSIFIER, col="a", out="t", model="m", classes=2),
+         op("k", D.SINK, semantics=D.BAG)],
+        [Link("s", "c"), Link("c", "k")],
+    )
+    Q = P.replace_op(op("c", D.CLASSIFIER, col="b", out="t", model="m", classes=2))
+    result = verify(P, Q, CFG)
+    assert result.verdict is None
+    assert result.certificate is None and not result.certified
+
+
+# ---------------------------------------------------------------------------
+# tampering
+# ---------------------------------------------------------------------------
+
+
+def test_tampered_fingerprint_fails_replay():
+    P, Q = _two_filter_pair()
+    cert = verify(P, Q, CFG).certificate
+    bad = tampered(cert)
+    report = bad.replay()
+    assert not report.ok
+    assert any("mismatch" in str(f) or "certify" in str(f) for f in report.failures)
+
+
+def test_tampered_window_contents_fail_replay():
+    """Swapping the recorded window payload for a semantically different
+    pair must be caught by the fingerprint re-computation."""
+    P, Q = _two_filter_pair("x")
+    P2, Q2 = _two_filter_pair("y", a_thresh=3)  # different predicate
+    cert = verify(P, Q, CFG).certificate
+    other = verify(P2, Q2, CFG).certificate
+    ev_i = next(i for i, w in enumerate(cert.windows) if w.kind == "ev")
+    other_ev = next(w for w in other.windows if w.kind == "ev")
+    recs = list(cert.windows)
+    # graft the other pair's payload under the original fingerprint
+    recs[ev_i] = dataclasses.replace(recs[ev_i], payload=other_ev.payload)
+    bad = dataclasses.replace(cert, windows=tuple(recs))
+    report = bad.replay()
+    assert not report.ok
+
+
+def test_tampered_ev_name_fails_replay():
+    P, Q = _two_filter_pair()
+    cert = verify(P, Q, CFG).certificate
+    ev_i = next(i for i, w in enumerate(cert.windows) if w.kind == "ev")
+    recs = list(cert.windows)
+    recs[ev_i] = dataclasses.replace(recs[ev_i], ev_name="no_such_ev")
+    bad = dataclasses.replace(cert, windows=tuple(recs))
+    assert not bad.replay().ok
+
+
+# ---------------------------------------------------------------------------
+# JSON round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_json_round_trip_preserves_verdicts_and_replay():
+    P, Q = _two_filter_pair()
+    cert = verify(P, Q, CFG).certificate
+    restored = Certificate.from_json(cert.to_json())
+    assert restored == cert
+    assert [w.verdict for w in restored.windows] == [w.verdict for w in cert.windows]
+    assert restored.replay().ok
+    # a second round trip is byte-stable
+    assert restored.to_json() == cert.to_json()
+
+
+def test_json_round_trip_false_certificate():
+    P, _ = _two_filter_pair("z", swap=False)
+    Q = P.replace_op(op("zfa", D.FILTER, pred=Pred.cmp("a", ">", 4)))
+    cert = verify(P, Q, CFG).certificate
+    restored = Certificate.from_json(cert.to_json())
+    assert restored.verdict is False
+    assert restored.replay().ok
+
+
+def test_malformed_json_rejected():
+    with pytest.raises(CertificateFormatError):
+        Certificate.from_json("not json{")
+    with pytest.raises(CertificateFormatError):
+        Certificate.from_json("{}")
+
+
+# ---------------------------------------------------------------------------
+# verdict-cache interaction (the auditable-cache property)
+# ---------------------------------------------------------------------------
+
+
+def test_cache_hit_verdicts_produce_complete_certificates():
+    cache = VerdictCache()
+    P, Q = _two_filter_pair()
+    r1 = verify(P, Q, CFG, cache=cache)
+    assert r1.stats.ev_calls > 0
+    # same question again: answered from the cache, zero EV calls...
+    r2 = verify(P, Q, CFG, cache=cache)
+    assert r2.stats.ev_calls == 0 and r2.stats.cache_hits > 0
+    # ...but the certificate is as complete as the cold one and replays
+    assert r2.certified
+    assert len(r2.certificate.windows) == len(r1.certificate.windows)
+    assert r2.certificate.replay().ok
+
+
+def test_warm_chain_session_pairs_all_certified(tmp_path):
+    path = tmp_path / "verdicts.json"
+    chain = make_chain(6)
+    cfg = CFG.replace(cache_path=str(path))
+    with VersionChainSession(config=cfg) as s1:
+        for v in chain:
+            s1.submit(v)
+    s2 = VersionChainSession(config=cfg)
+    for v in chain:
+        s2.submit(v)
+    report = s2.report()
+    assert report.total_ev_calls == 0                 # fully warm
+    assert report.certified_pairs == len(report.pairs)
+    assert report.certified_fraction == 1.0
+    for p in report.pairs:
+        assert p.certificate.replay(default_registry()).ok
+    assert "certificate-backed" in report.summary()
+    assert "cert" in report.pairs[0].row()
+
+
+def test_empty_identical_record_rejected():
+    """A forged certificate whose 'identical' record carries no operators
+    must not replay green (identical_under_mapping is vacuously True on
+    empty sets)."""
+    from repro.api import WindowRecord
+
+    forged = Certificate(
+        verdict=True,
+        kind="decomposition",
+        semantics=D.BAG,
+        mapping=(),
+        windows=(
+            WindowRecord(
+                kind="identical",
+                verdict=True,
+                payload={"p_ops": [], "q_ops": [], "p_links": [],
+                         "q_links": [], "forward": {}},
+            ),
+        ),
+    )
+    report = forged.replay()
+    assert not report.ok
+    assert any("no operators" in str(f) for f in report.failures)
+
+
+def test_session_keep_certificates_false_drops_payload_not_flag(tmp_path):
+    chain = make_chain(4)
+    session = VersionChainSession(config=CFG, keep_certificates=False)
+    returned = [session.submit(v) for v in chain]
+    # submit still hands the caller the full certificate...
+    assert all(r.certificate is not None for r in returned[1:])
+    # ...but the session-lifetime report keeps only the truthful flag
+    report = session.report()
+    assert all(p.certificate is None for p in report.pairs)
+    assert all(p.certified for p in report.pairs)
+    assert report.certified_fraction == 1.0
+
+
+def _two_branch_pair():
+    """Two independent swapped-filter branches → a 2-window decomposition."""
+
+    def build(swap):
+        ops, links = [], []
+        for j in (0, 1):
+            fa = op(f"fa{j}", D.FILTER, pred=Pred.cmp("a", ">", 2 + j))
+            fb = op(f"fb{j}", D.FILTER, pred=Pred.cmp("b", "<", 5 + j))
+            order = (fb, fa) if swap else (fa, fb)
+            path = [f"src{j}", order[0].id, order[1].id, f"sink{j}"]
+            ops += [op(f"src{j}", D.SOURCE, schema=SCHEMA), fa, fb,
+                    op(f"sink{j}", D.SINK, semantics=D.BAG)]
+            links += [Link(x, y) for x, y in zip(path, path[1:])]
+        return DataflowDAG(ops, links)
+
+    return build(False), build(True)
+
+
+def test_pair_bound_replay_green_on_matching_pair():
+    P, Q = _two_filter_pair()
+    cert = verify(P, Q, CFG).certificate
+    assert cert.pair_digest is not None
+    report = cert.replay(default_registry(), P, Q)
+    assert report.ok, report.summary()
+
+
+def test_pair_bound_replay_rejects_foreign_pair():
+    """A valid certificate minted for pair A must not audit pair B."""
+    P1, Q1 = _two_filter_pair("x")
+    P2, Q2 = _two_filter_pair("y", a_thresh=3)
+    cert = verify(P1, Q1, CFG).certificate
+    report = cert.replay(default_registry(), P2, Q2)
+    assert not report.ok
+    assert any("different pair" in str(f) for f in report.failures)
+
+
+def test_pair_bound_replay_rejects_truncated_decomposition():
+    """Dropping a window from a multi-window certificate self-replays green
+    but must fail the coverage check once the pair is supplied."""
+    P, Q = _two_branch_pair()
+    cert = verify(P, Q, CFG).certificate
+    assert len(cert.windows) >= 2
+    truncated = dataclasses.replace(cert, windows=cert.windows[:1])
+    assert truncated.replay().ok  # self-consistency alone cannot catch this
+    report = truncated.replay(default_registry(), P, Q)
+    assert not report.ok
+    assert any("not covered" in str(f) for f in report.failures)
+
+
+def test_forged_eq_from_neq_evidence_rejected():
+    """Re-labeling a genuine witness (NEQ) certificate as a decomposition
+    (EQ) certificate must fail replay: a True certificate needs every
+    window verdict True."""
+    P, _ = _two_filter_pair("z", swap=False)
+    Q = P.replace_op(op("zfa", D.FILTER, pred=Pred.cmp("a", ">", 4)))
+    cert = verify(P, Q, CFG).certificate
+    assert cert.verdict is False
+    forged = dataclasses.replace(cert, verdict=True, kind="decomposition")
+    assert not forged.replay().ok
+    assert not forged.replay(default_registry(), P, Q).ok
+
+
+def test_identical_under_mapping_requires_bijection():
+    from repro.core.window import identical_under_mapping
+
+    src = op("s", D.SOURCE, schema=SCHEMA)
+    src2 = op("t", D.SOURCE, schema=SCHEMA)
+    filt = op("y", D.FILTER, pred=Pred.cmp("a", ">", 1))
+    # non-injective forward maps both p-ops onto 'x', leaving the filter
+    # 'y' unexamined — must be rejected, not vacuously accepted
+    assert not identical_under_mapping(
+        {"a": src, "b": src2},
+        {"x": op("x", D.SOURCE, schema=SCHEMA), "y": filt},
+        [], [], {"a": "x", "b": "x"},
+    )
+
+
+def test_forged_identical_record_rejected_by_bound_replay():
+    """An 'identical' record whose payload is self-consistent but does not
+    describe the pair must fail once the pair is supplied: bound replay
+    re-derives the sub-graphs from the pair itself."""
+    from repro.api import WindowRecord, pair_digest
+    from repro.api.serialize import operator_to_dict
+
+    P = DataflowDAG(
+        [op("s", D.SOURCE, schema=SCHEMA),
+         op("f", D.FILTER, pred=Pred.cmp("a", ">", 2)),
+         op("k", D.SINK, semantics=D.BAG)],
+        [Link("s", "f"), Link("f", "k")],
+    )
+    Q = P.replace_op(op("f", D.FILTER, pred=Pred.cmp("a", ">", 4)))  # NOT eq
+    fake_ops = [operator_to_dict(o) for o in P.ops.values()]  # P's side twice
+    forged = Certificate(
+        verdict=True,
+        kind="decomposition",
+        semantics=D.BAG,
+        mapping=tuple((i, i) for i in P.ops),
+        windows=(
+            WindowRecord(
+                kind="identical",
+                verdict=True,
+                units=(0, 1, 2),
+                payload={
+                    "p_ops": fake_ops, "q_ops": fake_ops,
+                    "p_links": [["s", "f", 0], ["f", "k", 0]],
+                    "q_links": [["s", "f", 0], ["f", "k", 0]],
+                    "forward": {i: i for i in P.ops},
+                },
+            ),
+        ),
+        pair_digest=pair_digest(P, Q, D.BAG),
+        n_units=3,
+    )
+    assert forged.replay().ok            # self-consistency alone is fooled
+    report = forged.replay(default_registry(), P, Q)
+    assert not report.ok                 # the pair itself is not
+    assert any("not" in str(f) for f in report.failures)
+
+
+def test_session_forwards_raw_veer_kwargs():
+    """Pre-api callers passing Veer kwargs directly must still be honored."""
+    session = VersionChainSession(max_decompositions=7)
+    assert session.veer.max_decompositions == 7
+
+
+def test_replay_uses_fresh_uncached_evs():
+    """Replay must not consult the verdict cache: poisoning the cache after
+    certification must not change the replay outcome."""
+    cache = VerdictCache()
+    P, Q = _two_filter_pair()
+    cert = verify(P, Q, CFG, cache=cache).certificate
+    # poison every cached verdict
+    for (ev_name, fp) in list(cache._entries):
+        cache.put(ev_name, fp, False, 0.0)
+    assert cert.replay().ok  # unaffected: fresh EVs, no cache
