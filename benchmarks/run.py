@@ -20,6 +20,7 @@ def main() -> None:
         chain_bench,
         figs_scaling,
         roofline_bench,
+        service_bench,
         table1_ev_support,
         table5_comparison,
         table6_optimizations,
@@ -81,6 +82,24 @@ def main() -> None:
         "chain_bench", time.perf_counter() - t0,
         f"ev_calls_saved={saved_pct:.0f}% warm_ev_calls={warm.total_ev_calls} "
         f"warm_cert_backed={100.0 * warm.certified_fraction:.0f}%",
+    ))
+
+    print("\n== Service throughput: 4 concurrent clients, shared cache ==")
+    t0 = time.perf_counter()
+    r = service_bench.run(clients=4, workers=4, n_versions=12)
+    print(
+        f"sequential {r['seq_pairs_per_sec']:.1f} pairs/s vs service "
+        f"{r['svc_pairs_per_sec']:.1f} pairs/s ({r['speedup']:.1f}x), "
+        f"EV calls {r['base_ev_calls']} -> {r['svc_ev_calls']} "
+        f"({r['ev_calls_saved_pct']:.0f}% saved), "
+        f"replay {r['replayed']}/{r['replayed'] + r['replay_failures']} ok, "
+        f"{r['verdict_mismatches']} verdict mismatches"
+    )
+    csv_lines.append(_csv(
+        "service_bench", time.perf_counter() - t0,
+        f"speedup={r['speedup']:.1f}x pairs_per_sec={r['svc_pairs_per_sec']:.0f} "
+        f"ev_calls_saved={r['ev_calls_saved_pct']:.0f}% "
+        f"replay_ok={r['replay_ok_pct']:.0f}%",
     ))
 
     print("\n== Roofline table (single-pod baseline) ==")

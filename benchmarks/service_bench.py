@@ -1,0 +1,181 @@
+"""Service throughput benchmark: concurrent clients over one verdict store.
+
+Simulates ``--clients N`` analysts evolving the same 12-version dataflow
+chain (the paper's §1 iterative workload at GEqO's "cloud scale" framing)
+and measures pairs/sec two ways:
+
+  * **sequential baseline** — every client's chain verified one pair at a
+    time with a fresh, uncached verifier (the paper's per-pair setting;
+    today's status quo without the service layer);
+  * **service** — a ``VerificationService`` with ``--workers M`` worker
+    threads multiplexing all clients over one shared thread-safe
+    ``VerdictCache``: the first client to pay for a window verdict answers
+    it for every other client.
+
+The run fails unless the service reproduces the baseline verdicts exactly
+and every decided pair's certificate replays green — concurrency must never
+trade soundness or auditability for throughput.
+
+    PYTHONPATH=src python benchmarks/service_bench.py \
+        [--clients N] [--workers M] [--versions V] [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from typing import Dict, List, Optional
+
+sys.path.insert(0, "src")
+
+from repro.api import VeerConfig
+from repro.service import VerificationService
+from repro.service.synthetic import make_chain
+
+
+def _config(use_jaxpr: bool, max_workers: int = 1) -> VeerConfig:
+    evs = ("equitas", "spes", "udp") + (("jaxpr",) if use_jaxpr else ())
+    return VeerConfig(evs=evs, max_workers=max_workers)
+
+
+def run(
+    clients: int = 4,
+    workers: int = 4,
+    n_versions: int = 12,
+    use_jaxpr: bool = False,
+    max_workers: int = 1,
+) -> Dict[str, object]:
+    """Returns the throughput comparison as a flat metrics dict."""
+    config = _config(use_jaxpr, max_workers)
+    chain = make_chain(n_versions)
+    pairs_per_client = n_versions - 1
+    total_pairs = clients * pairs_per_client
+
+    # -- sequential baseline: fresh uncached verifier per pair ---------------
+    base_verdicts: Dict[str, List[Optional[bool]]] = {}
+    base_calls = 0
+    t0 = time.perf_counter()
+    for c in range(clients):
+        verdicts: List[Optional[bool]] = []
+        for a, b in zip(chain, chain[1:]):
+            with config.build() as veer:  # close() releases any window pool
+                verdict, stats = veer.verify(a, b)
+            verdicts.append(verdict)
+            base_calls += stats.ev_calls
+        base_verdicts[f"client-{c}"] = verdicts
+    seq_wall = time.perf_counter() - t0
+
+    # -- concurrent service: shared cache, parallel clients ------------------
+    svc = VerificationService(config=config, workers=workers)
+    t0 = time.perf_counter()
+    for v in chain:  # round-robin arrival order, like real traffic
+        for c in range(clients):
+            svc.submit(f"client-{c}", v)
+    report = svc.drain()
+    svc_wall = time.perf_counter() - t0
+    svc.close(save=False)
+
+    # -- equivalence with the baseline + certificate audit -------------------
+    verdict_mismatches = 0
+    replayed = 0
+    replay_failures = 0
+    for cid, chain_report in sorted(report.sessions.items()):
+        if chain_report.verdicts != base_verdicts[cid]:
+            verdict_mismatches += 1
+        for p in chain_report.pairs:
+            if p.verdict is None:
+                continue
+            if p.certificate is None or not p.certificate.replay().ok:
+                replay_failures += 1
+            else:
+                replayed += 1
+
+    svc_calls = report.total_ev_calls
+    return {
+        "clients": clients,
+        "workers": workers,
+        "pairs": total_pairs,
+        "seq_wall": seq_wall,
+        "svc_wall": svc_wall,
+        "seq_pairs_per_sec": total_pairs / max(seq_wall, 1e-9),
+        "svc_pairs_per_sec": total_pairs / max(svc_wall, 1e-9),
+        "speedup": seq_wall / max(svc_wall, 1e-9),
+        "base_ev_calls": base_calls,
+        "svc_ev_calls": svc_calls,
+        "ev_calls_saved_pct": 100.0 * (1 - svc_calls / max(1, base_calls)),
+        "verdict_mismatches": verdict_mismatches,
+        "replayed": replayed,
+        "replay_failures": replay_failures,
+        "replay_ok_pct": 100.0 * replayed / max(1, replayed + replay_failures),
+        "errors": len(report.errors),
+        "report": report,
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--versions", type=int, default=None)
+    ap.add_argument("--smoke", action="store_true", help="short chain for CI")
+    ap.add_argument(
+        "--jaxpr", action="store_true", help="include the JaxprEV in the roster"
+    )
+    ap.add_argument(
+        "--max-workers",
+        type=int,
+        default=1,
+        help="intra-pair window-dispatch threads per verifier (VeerConfig.max_workers)",
+    )
+    args = ap.parse_args(argv)
+    if args.clients < 1 or args.workers < 1:
+        ap.error("--clients and --workers must be positive")
+    n = args.versions or (6 if args.smoke else 12)
+    if n < 2:
+        ap.error("--versions must be at least 2")
+
+    r = run(args.clients, args.workers, n, args.jaxpr, args.max_workers)
+
+    print(
+        f"== {r['clients']} clients x {n} versions "
+        f"({r['pairs']} pairs), {r['workers']} workers =="
+    )
+    print(
+        f"sequential baseline: {r['seq_wall'] * 1e3:8.1f} ms  "
+        f"{r['seq_pairs_per_sec']:7.1f} pairs/s  {r['base_ev_calls']:>5} EV calls"
+    )
+    print(
+        f"concurrent service:  {r['svc_wall'] * 1e3:8.1f} ms  "
+        f"{r['svc_pairs_per_sec']:7.1f} pairs/s  {r['svc_ev_calls']:>5} EV calls"
+    )
+    print(
+        f"speedup {r['speedup']:.1f}x, EV calls saved "
+        f"{r['ev_calls_saved_pct']:.0f}%, verdict mismatches "
+        f"{r['verdict_mismatches']}, certificate replay "
+        f"{r['replayed']}/{r['replayed'] + r['replay_failures']} ok"
+    )
+
+    # scaffold CSV contract (see benchmarks/run.py)
+    print(
+        f"service_bench,{r['svc_wall'] * 1e6 / max(1, r['pairs']):.1f},"
+        f"speedup={r['speedup']:.1f}x"
+        f"_saved={r['ev_calls_saved_pct']:.0f}%"
+        f"_replay={r['replay_ok_pct']:.0f}%"
+    )
+
+    ok = (
+        r["verdict_mismatches"] == 0
+        and r["replay_failures"] == 0
+        and r["errors"] == 0
+        and r["svc_ev_calls"] < r["base_ev_calls"]
+    )
+    if not ok:
+        print("FAILED: service diverged from the sequential baseline "
+              "(verdicts, certificates, or EV-call savings)")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

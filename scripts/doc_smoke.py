@@ -1,0 +1,129 @@
+"""Doc-smoke: extract and execute every Python code block in the docs.
+
+Documentation quickstarts rot silently — an API rename leaves the README
+demonstrating calls that no longer exist.  This script makes the docs part
+of CI: every fenced ```python block in README.md and docs/*.md is executed,
+in order, with one shared namespace per document (so a later block can use
+names an earlier block defined, exactly as a reader would run them).
+
+Conventions the docs follow so their blocks stay runnable:
+
+  * blocks run from the repo root with ``src`` on ``sys.path`` (a literal
+    ``sys.path.insert(0, "src")`` inside a block is harmless);
+  * a block that is deliberately not runnable (pseudo-code, fragments)
+    is fenced as plain ``` or annotated ```python skip=doc-smoke on the
+    fence line;
+  * blocks must clean up after themselves (use tempfile for any files).
+
+Usage:
+
+    python scripts/doc_smoke.py              # all default documents
+    python scripts/doc_smoke.py README.md docs/CERTIFICATES.md
+    python scripts/doc_smoke.py --list       # show blocks without running
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+import re
+import sys
+import time
+import traceback
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+DEFAULT_DOCS = ("README.md", "docs")  # docs entry expands to docs/*.md
+
+FENCE_RE = re.compile(
+    r"^```python(?P<attrs>[^\n`]*)\n(?P<body>.*?)^```\s*$",
+    re.MULTILINE | re.DOTALL,
+)
+
+
+def collect_documents(args: list[str]) -> list[pathlib.Path]:
+    entries = args or list(DEFAULT_DOCS)
+    docs: list[pathlib.Path] = []
+    for entry in entries:
+        p = (REPO_ROOT / entry).resolve()
+        if p.is_dir():
+            docs.extend(sorted(p.glob("*.md")))
+        elif p.exists():
+            docs.append(p)
+        else:
+            raise SystemExit(f"doc-smoke: no such document: {entry}")
+    return docs
+
+
+def extract_blocks(doc: pathlib.Path) -> list[tuple[int, str]]:
+    """``(line_number, source)`` for every runnable python block."""
+    text = doc.read_text()
+    blocks = []
+    for m in FENCE_RE.finditer(text):
+        if "skip=doc-smoke" in m.group("attrs"):
+            continue
+        line = text[: m.start()].count("\n") + 1
+        blocks.append((line, m.group("body")))
+    return blocks
+
+
+def run_document(doc: pathlib.Path, verbose: bool = False) -> list[str]:
+    """Execute the document's blocks in one namespace; return failures."""
+    failures = []
+    namespace: dict = {"__name__": f"docsmoke_{doc.stem}"}
+    for line, body in extract_blocks(doc):
+        label = f"{doc.relative_to(REPO_ROOT)}:{line}"
+        if verbose:
+            print(f"  running block at {label}")
+        try:
+            code = compile(body, str(label), "exec")
+            exec(code, namespace)  # noqa: S102 - executing our own docs is the point
+        except (KeyboardInterrupt, SystemExit):
+            raise  # Ctrl-C aborts the whole run, it is not a block failure
+        except BaseException:
+            failures.append(f"{label}\n{traceback.format_exc()}")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("documents", nargs="*", help="markdown files or directories")
+    ap.add_argument("--list", action="store_true", help="list blocks, don't run")
+    ap.add_argument("-v", "--verbose", action="store_true")
+    args = ap.parse_args(argv)
+
+    sys.path.insert(0, str(REPO_ROOT / "src"))
+    docs = collect_documents(args.documents)
+
+    total_blocks = 0
+    all_failures: list[str] = []
+    for doc in docs:
+        blocks = extract_blocks(doc)
+        total_blocks += len(blocks)
+        rel = doc.relative_to(REPO_ROOT)
+        if args.list:
+            for line, _ in blocks:
+                print(f"{rel}:{line}")
+            continue
+        t0 = time.perf_counter()
+        failures = run_document(doc, verbose=args.verbose)
+        status = "ok" if not failures else f"{len(failures)} FAILED"
+        print(
+            f"{rel}: {len(blocks)} blocks, {status} "
+            f"({time.perf_counter() - t0:.1f}s)"
+        )
+        all_failures.extend(failures)
+
+    if args.list:
+        return 0
+    if all_failures:
+        print(f"\ndoc-smoke: {len(all_failures)} failing block(s)\n")
+        for f in all_failures:
+            print(f)
+        return 1
+    print(f"doc-smoke: all {total_blocks} blocks across {len(docs)} documents pass")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -24,6 +24,10 @@ must cover every change — so truncated evidence or a certificate minted for
 a different pair is rejected too.  ``to_json``/``from_json`` round-trip the
 whole object, which is what makes cross-session cached verdicts evidence
 rather than trust-me.
+
+The JSON format and replay semantics are specified normatively in
+``docs/CERTIFICATES.md`` (executed by the doc-smoke CI job); EV-name
+resolution at replay time is covered in ``docs/EV_PLUGINS.md``.
 """
 
 from __future__ import annotations
@@ -52,11 +56,17 @@ from repro.core.window import VersionPair, identical_under_mapping
 
 def pair_digest(P: DataflowDAG, Q: DataflowDAG, semantics: str) -> str:
     """Content digest of a version pair — what binds a certificate to the
-    specific ``(P, Q, semantics)`` it was issued for."""
-    blob = repr((P.signature(), Q.signature(), semantics))
+    specific ``(P, Q, semantics)`` it was issued for.  Built from the DAGs'
+    memoized ``content_digest``s, so the service-layer hot path (the
+    pair-verdict cache keys every submitted pair by this) costs one hash of
+    two short hex strings after the first call per DAG."""
+    blob = f"{P.content_digest()}|{Q.content_digest()}|{semantics}"
     return hashlib.sha256(blob.encode()).hexdigest()[:32]
 
-CERTIFICATE_FORMAT_VERSION = 1
+# v2: pair_digest rebuilt on DataflowDAG.content_digest (the memoized
+# per-DAG sha256) — digests from v1 certificates do not compare equal, so
+# the version bump keeps old evidence from replaying under new rules
+CERTIFICATE_FORMAT_VERSION = 2
 
 # certificate kinds (mirror VerificationEvidence.kind)
 EXACT = "exact"                    # no changes under the mapping
@@ -138,7 +148,12 @@ class ReplayReport:
 
 @dataclass(frozen=True)
 class Certificate:
-    """Machine-replayable evidence behind one True/False verdict."""
+    """Machine-replayable evidence behind one True/False verdict.
+
+    Serialized layout and the rules a consumer may rely on are specified
+    in ``docs/CERTIFICATES.md`` — the format is versioned
+    (``CERTIFICATE_FORMAT_VERSION``) and incompatible changes bump it.
+    """
 
     verdict: bool
     kind: str                                   # EXACT/DECOMPOSITION/WITNESS/SYMBOLIC

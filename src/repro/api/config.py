@@ -55,6 +55,10 @@ class VeerConfig:
     max_decompositions: int = 50_000
     max_windows: int = 200_000
     mapping_limit: int = 8
+    # window-dispatch worker pool: 1 = sequential; N > 1 checks the windows
+    # of each candidate decomposition concurrently (verdicts are committed
+    # in deterministic order, so certificates match the sequential run)
+    max_workers: int = 1
     # environment
     semantics: str = D.BAG
     cache_path: Optional[str] = None
@@ -87,7 +91,7 @@ class VeerConfig:
             )
         if len(set(self.evs)) != len(self.evs):
             raise ConfigError(f"duplicate EV names in {self.evs}")
-        for f in _BUDGET_FIELDS:
+        for f in _BUDGET_FIELDS + ("max_workers",):
             v = getattr(self, f)
             if not isinstance(v, int) or v <= 0:
                 raise ConfigError(f"{f} must be a positive int, got {v!r}")
@@ -115,6 +119,7 @@ class VeerConfig:
             registry.build(list(self.evs)),
             **{f: getattr(self, f) for f in _FLAG_FIELDS},
             **{f: getattr(self, f) for f in _BUDGET_FIELDS},
+            max_workers=self.max_workers,
             verdict_cache=cache,
         )
 

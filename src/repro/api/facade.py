@@ -28,12 +28,18 @@ from repro.core.verifier import Veer, VeerStats
 
 @dataclass(frozen=True)
 class VerificationResult:
-    """Verdict + search stats + (for decided verdicts) the certificate."""
+    """Verdict + search stats + (for decided verdicts) the certificate.
+
+    ``reused`` marks a result answered wholesale from a shared pair-verdict
+    cache (``repro.service.pair_cache``): no search ran for this call and
+    ``stats`` carries only the avoided work.
+    """
 
     verdict: Optional[bool]
     stats: VeerStats
     certificate: Optional[Certificate]
     config: VeerConfig
+    reused: bool = False
 
     @property
     def equivalent(self) -> bool:

@@ -15,6 +15,10 @@ Selection by name is also what makes certificates auditable: a
 registry for a *fresh* instance of that EV — no verdict cache, no search
 state — so the replayed verdict is independent of the session that produced
 the certificate.
+
+How to author and register a new EV (capability metadata, fragment
+support, restriction monotonicity, a worked plugin example) is documented
+in ``docs/EV_PLUGINS.md`` — executed by the doc-smoke CI job.
 """
 
 from __future__ import annotations

@@ -12,6 +12,7 @@ for the cut boundary (§4.1).
 
 from __future__ import annotations
 
+import hashlib
 import json
 from dataclasses import dataclass, field, replace
 from typing import Any, Dict, FrozenSet, Iterable, List, Mapping, Optional, Sequence, Set, Tuple
@@ -137,6 +138,9 @@ class DataflowDAG:
 
     # -- construction --------------------------------------------------------
     def _rebuild_index(self) -> None:
+        # every mutation helper ends here: drop the structural memos
+        self._signature: Optional[Tuple] = None
+        self._content_digest: Optional[str] = None
         self.in_links: Dict[str, List[Link]] = {i: [] for i in self.ops}
         self.out_links: Dict[str, List[Link]] = {i: [] for i in self.ops}
         seen = set()
@@ -281,11 +285,28 @@ class DataflowDAG:
 
     def signature(self) -> Tuple:
         """Whole-DAG structural signature (isomorphism-sensitive but id-free
-        only for ops with unique signatures; used as a cheap memo key)."""
-        return (
-            tuple(sorted(op.signature() + (op.id,) for op in self.ops.values())),
-            tuple(sorted(l.key() for l in self.links)),
-        )
+        only for ops with unique signatures; used as a cheap memo key).
+        Memoized — safe because every mutation helper rebuilds the index,
+        which drops the memo."""
+        sig = self._signature
+        if sig is None:
+            sig = (
+                tuple(sorted(op.signature() + (op.id,) for op in self.ops.values())),
+                tuple(sorted(l.key() for l in self.links)),
+            )
+            self._signature = sig
+        return sig
+
+    def content_digest(self) -> str:
+        """Memoized sha256 of the structural signature — the building block
+        of ``repro.api.certificate.pair_digest``, cheap enough to recompute
+        per service request (a hot path: the pair-verdict cache keys every
+        submitted pair by it)."""
+        d = self._content_digest
+        if d is None:
+            d = hashlib.sha256(repr(self.signature()).encode()).hexdigest()
+            self._content_digest = d
+        return d
 
     def __repr__(self) -> str:
         return f"DAG(ops={len(self.ops)}, links={len(self.links)})"

@@ -22,12 +22,25 @@ verdict an individual EV returns, so per-EV entries stay valid.
 ``CachedEV`` is the wrapper the verifier sees: a drop-in ``BaseEV`` facade
 (attribute access proxies to the wrapped EV) whose ``check`` consults the
 cache first and records hit/miss/time-saved statistics.
+
+Concurrency: one ``VerdictCache`` may back many verifier threads — the
+parallel window dispatch inside a single ``Veer`` (``max_workers > 1``) and
+the worker pool of a ``repro.service.server.VerificationService`` both hit
+the same store.  All cache state (the entry map, the dirty flag, the
+hit/miss counters) is guarded by a single re-entrant lock, and ``save()``
+writes a temp file in the target directory and atomically renames it into
+place, so a reader (or a crash mid-save) can never observe a torn JSON
+file.  See docs/ARCHITECTURE.md's concurrency-model section.
 """
 
 from __future__ import annotations
 
 import json
+import os
 import pathlib
+import stat
+import tempfile
+import threading
 import time
 from dataclasses import dataclass
 from typing import Dict, Iterable, Optional, Tuple
@@ -60,6 +73,10 @@ class VerdictCache:
         self.path = pathlib.Path(path).expanduser() if path is not None else None
         self._entries: Dict[Tuple[str, str], CacheEntry] = {}
         self._dirty = False
+        # single writer lock: every read/write of _entries, _dirty and the
+        # counters goes through it, so one store can back many threads
+        # (sessions of a VerificationService, the verifier's window pool)
+        self._lock = threading.RLock()
         self.hits = 0
         self.misses = 0
         self.time_saved = 0.0
@@ -68,13 +85,14 @@ class VerdictCache:
 
     # -- core map ------------------------------------------------------------
     def get(self, ev_name: str, fingerprint: str) -> Optional[CacheEntry]:
-        entry = self._entries.get((ev_name, fingerprint))
-        if entry is None:
-            self.misses += 1
-            return None
-        self.hits += 1
-        self.time_saved += entry.elapsed
-        return entry
+        with self._lock:
+            entry = self._entries.get((ev_name, fingerprint))
+            if entry is None:
+                self.misses += 1
+                return None
+            self.hits += 1
+            self.time_saved += entry.elapsed
+            return entry
 
     def put(
         self,
@@ -85,39 +103,82 @@ class VerdictCache:
     ) -> None:
         key = (ev_name, fingerprint)
         entry = CacheEntry(verdict, elapsed)
-        if self._entries.get(key) != entry:
-            self._entries[key] = entry
-            self._dirty = True
+        with self._lock:
+            if self._entries.get(key) != entry:
+                self._entries[key] = entry
+                self._dirty = True
 
     def covers(self, ev_names: Iterable[str], fingerprint: str) -> bool:
         """True iff every named EV's verdict for this pair is memoized —
         i.e. the window can be fully resolved without any EV call."""
-        return all((n, fingerprint) in self._entries for n in ev_names)
+        with self._lock:
+            return all((n, fingerprint) in self._entries for n in ev_names)
 
     def __len__(self) -> int:
-        return len(self._entries)
+        with self._lock:
+            return len(self._entries)
 
     def __contains__(self, key: Tuple[str, str]) -> bool:
-        return key in self._entries
+        with self._lock:
+            return key in self._entries
 
     # -- persistence -----------------------------------------------------------
     def save(self, path: Optional[str] = None) -> None:
+        """Serialize to ``path`` (default: the cache's own path) atomically.
+
+        The payload is written to a temp file in the target directory and
+        renamed into place (``os.replace``), so concurrent readers and
+        crash-interrupted saves never see a partially-written file: they get
+        either the previous complete snapshot or the new one.  Only the
+        entry snapshot is taken under the cache lock — serialization and
+        disk I/O run outside it, so a large save never stalls concurrent
+        ``get``/``put`` (i.e. every in-flight EV check of the service).
+        """
         target = pathlib.Path(path).expanduser() if path is not None else self.path
         if target is None:
             return
-        if target == self.path and not self._dirty:
-            return  # nothing new since the last write: skip the I/O
+        with self._lock:
+            if target == self.path and not self._dirty:
+                return  # nothing new since the last write: skip the I/O
+            entries = sorted(self._entries.items())
+            if target == self.path:
+                # claim the snapshot now; restored below if the write fails
+                self._dirty = False
         payload = {
             "version": CACHE_FORMAT_VERSION,
             "entries": [
                 [ev, fp, _VERDICT_TO_JSON[e.verdict], round(e.elapsed, 6)]
-                for (ev, fp), e in sorted(self._entries.items())
+                for (ev, fp), e in entries
             ],
         }
         target.parent.mkdir(parents=True, exist_ok=True)
-        target.write_text(json.dumps(payload))
-        if target == self.path:
-            self._dirty = False
+        fd, tmp_name = tempfile.mkstemp(
+            dir=target.parent, prefix=target.name + ".", suffix=".tmp"
+        )
+        try:
+            with os.fdopen(fd, "w") as f:  # owns fd from here on
+                # mkstemp creates 0600; keep the target's permissions (or a
+                # fixed 0644 for a fresh file — probing the umask would
+                # mutate process-global state and race other threads) so a
+                # shared store stays readable
+                try:
+                    mode = stat.S_IMODE(os.stat(target).st_mode)
+                except OSError:
+                    mode = 0o644
+                os.chmod(tmp_name, mode)
+                json.dump(payload, f)
+            os.replace(tmp_name, target)
+        except BaseException:
+            # the target file is untouched; drop the partial temp file and
+            # un-claim the snapshot so a later save retries these entries
+            try:
+                os.unlink(tmp_name)
+            except OSError:
+                pass
+            if target == self.path:
+                with self._lock:
+                    self._dirty = True
+            raise
 
     def load(self, path: Optional[str] = None) -> int:
         """Merge entries from disk; returns how many were loaded."""
@@ -131,25 +192,27 @@ class VerdictCache:
         if not isinstance(payload, dict) or payload.get("version") != CACHE_FORMAT_VERSION:
             return 0  # incompatible format: start fresh
         n = 0
-        try:
-            for ev, fp, verdict, elapsed in payload["entries"]:
-                self._entries[(ev, fp)] = CacheEntry(
-                    _VERDICT_FROM_JSON[verdict], float(elapsed)
-                )
-                n += 1
-        except (KeyError, TypeError, ValueError):
-            pass  # malformed row: keep what parsed, start cold for the rest
-        if n and target != self.path:
-            self._dirty = True  # merged foreign entries not yet on self.path
+        with self._lock:
+            try:
+                for ev, fp, verdict, elapsed in payload["entries"]:
+                    self._entries[(ev, fp)] = CacheEntry(
+                        _VERDICT_FROM_JSON[verdict], float(elapsed)
+                    )
+                    n += 1
+            except (KeyError, TypeError, ValueError):
+                pass  # malformed row: keep what parsed, start cold for the rest
+            if n and target != self.path:
+                self._dirty = True  # merged foreign entries not yet on self.path
         return n
 
     def stats(self) -> Dict[str, object]:
-        return {
-            "entries": len(self._entries),
-            "hits": self.hits,
-            "misses": self.misses,
-            "time_saved": self.time_saved,
-        }
+        with self._lock:
+            return {
+                "entries": len(self._entries),
+                "hits": self.hits,
+                "misses": self.misses,
+                "time_saved": self.time_saved,
+            }
 
 
 class CachedEV:
@@ -165,6 +228,7 @@ class CachedEV:
     def __init__(self, ev: BaseEV, cache: VerdictCache):
         self.ev = ev
         self.cache = cache
+        self._lock = threading.Lock()
         self.hits = 0
         self.misses = 0
         self.time_saved = 0.0
@@ -179,17 +243,36 @@ class CachedEV:
         return self.ev.validate(qp)
 
     def check(self, qp: QueryPair) -> Optional[bool]:
+        verdict, _, _, _ = self.check_recorded(qp)
+        return verdict
+
+    def check_recorded(
+        self, qp: QueryPair
+    ) -> Tuple[Optional[bool], bool, float, float]:
+        """``check`` plus provenance: ``(verdict, hit, elapsed, saved)``.
+
+        ``hit`` says whether the verdict came from the cache, ``elapsed`` is
+        the wall time of this call (the EV run on a miss, ~0 on a hit) and
+        ``saved`` the original check time a hit avoided.  Callers running
+        EV checks on worker threads use this instead of diffing the
+        ``hits`` counter before/after — the counters are shared and only
+        consistent under the lock, while the returned tuple is local to the
+        call.
+        """
         fp = qp.fingerprint()
         entry = self.cache.get(self.ev.name, fp)
         if entry is not None:
-            self.hits += 1
-            self.time_saved += entry.elapsed
-            return entry.verdict
-        self.misses += 1
+            with self._lock:
+                self.hits += 1
+                self.time_saved += entry.elapsed
+            return entry.verdict, True, 0.0, entry.elapsed
         t0 = time.perf_counter()
         verdict = self.ev.check(qp)
-        self.cache.put(self.ev.name, fp, verdict, time.perf_counter() - t0)
-        return verdict
+        elapsed = time.perf_counter() - t0
+        with self._lock:
+            self.misses += 1
+        self.cache.put(self.ev.name, fp, verdict, elapsed)
+        return verdict, False, elapsed, 0.0
 
 
 def wrap_evs(evs, cache: Optional[VerdictCache]):

@@ -16,7 +16,9 @@ from __future__ import annotations
 
 import heapq
 import itertools
+import threading
 import time
+from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Dict, FrozenSet, List, Optional, Sequence, Set, Tuple
 
@@ -118,7 +120,17 @@ class VeerStats:
 
 
 class Veer:
-    """Baseline verifier (Algorithms 1-3). Optimization flags off by default."""
+    """Baseline verifier (Algorithms 1-3). Optimization flags off by default.
+
+    ``max_workers > 1`` parallelizes the *batched window dispatch*: the
+    windows of each candidate decomposition are checked concurrently on a
+    thread pool, then their verdicts are committed in the deterministic
+    planned order, so verdicts, provenance and certificates are identical to
+    the sequential run regardless of thread completion order (see
+    ``_SearchContext.prefetch``).  The search itself stays single-threaded —
+    Algorithm 2's frontier is inherently sequential; the EV calls are the
+    cost worth spreading.
+    """
 
     def __init__(
         self,
@@ -134,6 +146,7 @@ class Veer:
         max_decompositions: int = 50_000,
         max_windows: int = 200_000,
         mapping_limit: int = 8,
+        max_workers: int = 1,
         verdict_cache: Optional[VerdictCache] = None,
     ):
         self.verdict_cache = verdict_cache
@@ -148,6 +161,9 @@ class Veer:
         self.max_decompositions = max_decompositions
         self.max_windows = max_windows
         self.mapping_limit = mapping_limit
+        self.max_workers = max_workers
+        self._executor: Optional[ThreadPoolExecutor] = None
+        self._executor_lock = threading.Lock()
 
     def attach_cache(self, cache: VerdictCache) -> "Veer":
         """Wire a (possibly shared) verdict cache into this verifier —
@@ -156,6 +172,34 @@ class Veer:
         self.verdict_cache = cache
         self.evs = wrap_evs(self.evs, cache)
         return self
+
+    # -------------------------------------------------------------- worker pool
+    def _pool(self) -> Optional[ThreadPoolExecutor]:
+        """The lazily-created window-dispatch pool (None when sequential)."""
+        if self.max_workers <= 1:
+            return None
+        if self._executor is None:
+            with self._executor_lock:
+                if self._executor is None:
+                    self._executor = ThreadPoolExecutor(
+                        max_workers=self.max_workers,
+                        thread_name_prefix="veer-window",
+                    )
+        return self._executor
+
+    def close(self) -> None:
+        """Shut down the window-dispatch pool (idempotent; the verifier
+        remains usable — the pool is recreated on the next parallel run)."""
+        with self._executor_lock:
+            if self._executor is not None:
+                self._executor.shutdown(wait=True)
+                self._executor = None
+
+    def __enter__(self) -> "Veer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     # ------------------------------------------------------------------ public
     def verify(
@@ -460,8 +504,17 @@ class Veer:
         (memoized verdicts, then verdict-cache-covered windows), so a cached
         non-True verdict short-circuits before any EV runs; the remaining
         windows are deduplicated by canonical fingerprint so isomorphic
-        windows inside one decomposition cost a single EV call."""
+        windows inside one decomposition cost a single EV call.
+
+        With ``max_workers > 1`` the planned windows are checked concurrently
+        and committed in planned order (``prefetch``) before the sequential
+        adoption loop below runs — the loop then only reads memoized
+        verdicts, so its control flow (short-circuit on the first non-True
+        window, witness detection) is byte-for-byte the sequential one."""
         order, adopt = ctx.batch_plan(windows)
+        pool = self._pool()
+        if pool is not None:
+            ctx.prefetch(order, pool)
         resolved = 0
         for w in order:
             v = ctx.window_verdict(w)
@@ -564,6 +617,26 @@ class Veer:
         ctx = _SearchContext(pair, self.evs, VeerStats(), self.verdict_cache)
         _, mcws = self._algorithm1(ctx, pair.changes[0])
         return mcws
+
+
+@dataclass
+class _WindowOutcome:
+    """The result of checking one window, decoupled from shared state.
+
+    ``_compute_outcome`` produces these without touching the context's
+    memo/provenance/stats (so it can run on worker threads);
+    ``_commit_outcome`` applies them on the search thread in deterministic
+    planned order.  The stat deltas ride along so parallel runs account EV
+    calls exactly where the commit happens, not where the thread ran.
+    """
+
+    verdict: Optional[bool]
+    provenance: Optional[Tuple[str, Optional[str]]]
+    ev_calls: int = 0
+    ev_time: float = 0.0
+    cache_hits: int = 0
+    calls_saved: int = 0
+    time_saved: float = 0.0
 
 
 class _SearchContext:
@@ -678,43 +751,91 @@ class _SearchContext:
         shortcut to True (non-covering windows, Lemma 5.3 CASE1)."""
         if win in self._verdict:
             return self._verdict[win]
-        v: Optional[bool] = UNKNOWN
+        return self._commit_outcome(win, self._compute_outcome(win))
+
+    def _compute_outcome(self, win: FrozenSet[int]) -> _WindowOutcome:
+        """Check one window without mutating verdict/provenance/stats state.
+
+        Safe to run on a worker thread: the only shared structures it
+        touches are the ``_valid``/query-pair memo dicts (distinct windows
+        write distinct keys; a duplicated computation produces an identical
+        value) and the verdict cache / ``CachedEV`` counters, which carry
+        their own locks.
+        """
         if self._identical(win):
-            v = TRUE
-            self.provenance[win] = ("identical", None)
-        else:
-            qp = self.query_pair(win)
-            if qp is not None:
-                for i in self.valid_evs(win):
-                    ev = self.evs[i]
-                    cached_ev = isinstance(ev, CachedEV)
-                    hits_before = ev.hits if cached_ev else 0
-                    saved_before = ev.time_saved if cached_ev else 0.0
-                    t0 = time.perf_counter()
-                    r = ev.check(qp)
-                    dt = time.perf_counter() - t0
-                    if cached_ev and ev.hits > hits_before:
-                        # answered from the verdict cache: not an EV call
-                        self.stats.cache_hits += 1
-                        self.stats.ev_calls_saved += 1
-                        self.stats.ev_time_saved += ev.time_saved - saved_before
-                    else:
-                        self.stats.ev_calls += 1
-                        self.stats.ev_time += dt
-                    if r is True:
-                        v = TRUE
-                        self.provenance[win] = ("ev", ev.name)
-                        break
-                    if r is False and ev.can_prove_inequivalence:
-                        # a capable EV's refutation is a proof (Thm 5.8):
-                        # stop — running more EVs wastes calls, and a buggy
-                        # later True must not overwrite a sound False
-                        v = FALSE
-                        self.provenance[win] = ("ev", ev.name)
-                        break
-        self.stats.windows_verified += 1
-        self._verdict[win] = v
-        return v
+            return _WindowOutcome(TRUE, ("identical", None))
+        out = _WindowOutcome(UNKNOWN, None)
+        qp = self.query_pair(win)
+        if qp is None:
+            return out
+        for i in self.valid_evs(win):
+            ev = self.evs[i]
+            if isinstance(ev, CachedEV):
+                r, hit, dt, saved = ev.check_recorded(qp)
+                if hit:
+                    # answered from the verdict cache: not an EV call
+                    out.cache_hits += 1
+                    out.calls_saved += 1
+                    out.time_saved += saved
+                else:
+                    out.ev_calls += 1
+                    out.ev_time += dt
+            else:
+                t0 = time.perf_counter()
+                r = ev.check(qp)
+                out.ev_calls += 1
+                out.ev_time += time.perf_counter() - t0
+            if r is True:
+                out.verdict = TRUE
+                out.provenance = ("ev", ev.name)
+                break
+            if r is False and ev.can_prove_inequivalence:
+                # a capable EV's refutation is a proof (Thm 5.8):
+                # stop — running more EVs wastes calls, and a buggy
+                # later True must not overwrite a sound False
+                out.verdict = FALSE
+                out.provenance = ("ev", ev.name)
+                break
+        return out
+
+    def _commit_outcome(
+        self, win: FrozenSet[int], out: _WindowOutcome
+    ) -> Optional[bool]:
+        """Apply a computed outcome on the search thread (idempotent)."""
+        if win in self._verdict:
+            return self._verdict[win]
+        if out.provenance is not None:
+            self.provenance[win] = out.provenance
+        s = self.stats
+        s.ev_calls += out.ev_calls
+        s.ev_time += out.ev_time
+        s.cache_hits += out.cache_hits
+        s.ev_calls_saved += out.calls_saved
+        s.ev_time_saved += out.time_saved
+        s.windows_verified += 1
+        self._verdict[win] = out.verdict
+        return out.verdict
+
+    def prefetch(
+        self, order: List[FrozenSet[int]], pool: ThreadPoolExecutor
+    ) -> None:
+        """Check a planned batch of windows concurrently; commit in order.
+
+        Every window of the batch is computed (no speculative cancellation —
+        the work set is fixed by the plan, never by thread timing) and the
+        outcomes are committed in the planned order, so memoized verdicts,
+        provenance and stats are reproducible run-to-run.  Windows the
+        sequential adoption loop then skips via its short-circuit were
+        *speculatively* checked; their verdicts stay memoized (and their EV
+        calls accounted), which is the latency-for-work trade parallel
+        dispatch makes.
+        """
+        targets = [w for w in order if w not in self._verdict]
+        if len(targets) < 2:
+            return  # nothing to overlap
+        futures = [(w, pool.submit(self._compute_outcome, w)) for w in targets]
+        for w, fut in futures:
+            self._commit_outcome(w, fut.result())
 
     def _identical(self, win: FrozenSet[int]) -> bool:
         """Both sub-DAGs structurally identical under the mapping."""

@@ -1,4 +1,9 @@
-"""Service layer: chain-level verification with cross-pair verdict reuse."""
+"""Service layer: chain-level verification with cross-pair verdict reuse.
+
+``VersionChainSession`` serves one client's version chain;
+``VerificationService`` multiplexes many concurrent sessions over one
+shared, thread-safe verdict cache (see ``repro.service.server``).
+"""
 
 from repro.service.chain import (
     ChainReport,
@@ -6,11 +11,24 @@ from repro.service.chain import (
     VersionChainSession,
     verify_chain,
 )
+from repro.service.pair_cache import PairEntry, PairVerdictCache
+from repro.service.server import (
+    ServiceBusy,
+    ServiceClosed,
+    ServiceReport,
+    VerificationService,
+)
 from repro.core.ev.cache import VerdictCache
 
 __all__ = [
     "ChainReport",
+    "PairEntry",
     "PairReport",
+    "PairVerdictCache",
+    "ServiceBusy",
+    "ServiceClosed",
+    "ServiceReport",
+    "VerificationService",
     "VersionChainSession",
     "verify_chain",
     "VerdictCache",

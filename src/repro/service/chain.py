@@ -49,6 +49,7 @@ from repro.core.edits import EditMapping
 from repro.core.ev.base import BaseEV
 from repro.core.ev.cache import VerdictCache
 from repro.core.verifier import Veer, VeerStats, make_veer_plus
+from repro.service.pair_cache import PairVerdictCache
 
 
 @dataclass
@@ -64,6 +65,9 @@ class PairReport:
     # session with keep_certificates=False drops the payload after returning
     # it to the submit caller
     certified: bool = False
+    # verdict + certificate reused wholesale from a PairVerdictCache hit
+    # (no search ran for this pair; stats carry only the avoided work)
+    reused: bool = False
 
     def __post_init__(self) -> None:
         if self.certificate is not None:
@@ -92,6 +96,7 @@ class PairReport:
             f"pair {self.index:>3}: {v:>3}  {cert}  ev_calls={self.ev_calls:<4} "
             f"cache_hits={self.cache_hits:<4} saved={self.ev_calls_saved:<4} "
             f"{self.wall_time * 1e3:8.1f} ms"
+            + ("  reused" if self.reused else "")
         )
 
 
@@ -124,6 +129,11 @@ class ChainReport:
     @property
     def certified_pairs(self) -> int:
         return sum(1 for p in self.pairs if p.certified)
+
+    @property
+    def reused_pairs(self) -> int:
+        """Pairs answered wholesale from the shared pair-verdict cache."""
+        return sum(1 for p in self.pairs if p.reused)
 
     @property
     def certified_fraction(self) -> float:
@@ -166,6 +176,7 @@ class VersionChainSession:
         semantics: Optional[str] = None,
         veer: Optional[Veer] = None,
         keep_certificates: bool = True,
+        pair_cache: Optional["PairVerdictCache"] = None,
         **veer_kw,
     ):
         """The preferred construction path is ``config=VeerConfig(...)``
@@ -178,7 +189,14 @@ class VersionChainSession:
         session-lifetime report after each ``submit`` returns (the caller
         still receives the full certificate; ``PairReport.certified`` stays
         truthful) — for very long monitoring sessions whose report must not
-        accumulate per-pair window payloads."""
+        accumulate per-pair window payloads.
+
+        ``pair_cache`` (a shared ``repro.service.pair_cache
+        .PairVerdictCache``) short-circuits whole pairs already decided by
+        any session sharing the cache: a content-digest hit reuses the
+        original verdict *and certificate* without running the search —
+        this is how a ``VerificationService`` answers N clients evolving
+        the same pipeline for one client's worth of work."""
         if config is not None and (evs is not None or veer is not None or veer_kw):
             raise ValueError("pass either config or evs/veer/veer_kw, not both")
         if veer is not None and (evs is not None or veer_kw):
@@ -208,6 +226,7 @@ class VersionChainSession:
             semantics = config.semantics if config is not None else D.BAG
         self.semantics = semantics
         self.keep_certificates = keep_certificates
+        self.pair_cache = pair_cache
         # only the previous version is needed for the next pair; a long-lived
         # session must not accumulate every DAG it ever saw
         self._prev: Optional[DataflowDAG] = None
@@ -233,15 +252,14 @@ class VersionChainSession:
         if prev is None:
             return None
         t0 = time.perf_counter()
-        verdict, stats, evidence = self.veer.verify_with_evidence(
-            prev, version, mapping, semantics=self.semantics
-        )
+        verdict, stats, certificate, reused = self._decide(prev, version, mapping)
         report = PairReport(
             index=self.version_count - 1,
             verdict=verdict,
             wall_time=time.perf_counter() - t0,
             stats=stats,
-            certificate=certificate_from_evidence(evidence),
+            certificate=certificate,
+            reused=reused,
         )
         if self.keep_certificates:
             self._report.pairs.append(report)
@@ -252,6 +270,27 @@ class VersionChainSession:
             )
         return report
 
+    def _decide(
+        self,
+        prev: DataflowDAG,
+        version: DataflowDAG,
+        mapping: Optional[EditMapping],
+    ):
+        """Verify one pair, going through the shared pair-verdict cache
+        when one is attached (single-flight: concurrent sessions deciding
+        the same content-identical pair run the search exactly once)."""
+        def compute():
+            verdict, stats, evidence = self.veer.verify_with_evidence(
+                prev, version, mapping, semantics=self.semantics
+            )
+            return verdict, stats, certificate_from_evidence(evidence)
+
+        if self.pair_cache is None:
+            verdict, stats, certificate = compute()
+            return verdict, stats, certificate, False
+        key = self.pair_cache.make_key(prev, version, self.semantics, mapping)
+        return self.pair_cache.compute_or_reuse(key, compute)
+
     def report(self) -> ChainReport:
         return self._report
 
@@ -259,11 +298,18 @@ class VersionChainSession:
         """Persist the verdict cache (no-op for purely in-memory caches)."""
         self.cache.save()
 
+    def close(self) -> None:
+        """Persist the cache and release the verifier's window-dispatch
+        pool (relevant for ``VeerConfig(max_workers > 1)``); the session
+        remains usable — the pool is recreated on the next parallel run."""
+        self.save()
+        self.veer.close()
+
     def __enter__(self) -> "VersionChainSession":
         return self
 
     def __exit__(self, *exc) -> None:
-        self.save()
+        self.close()
 
 
 def verify_chain(

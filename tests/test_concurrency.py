@@ -1,0 +1,289 @@
+"""Concurrency guarantees: thread-safe verdict cache, atomic save, and
+parallel window dispatch that reproduces the sequential run byte-for-byte.
+
+Three contracts from the service layer's concurrency model
+(docs/ARCHITECTURE.md):
+
+  * ``VerdictCache`` survives being hammered from many threads — no lost
+    updates, and a crash mid-``save`` (or a concurrent reader) never sees a
+    torn JSON file because saves write-temp-then-rename;
+  * ``verify`` with ``max_workers > 1`` yields the same verdict and a
+    byte-identical certificate as the sequential run — completion order
+    must never leak into evidence;
+  * ``PairVerdictCache`` single-flight: concurrent misses on one key run
+    the computation once.
+"""
+
+import json
+import threading
+
+import pytest
+
+from helpers import SCHEMA, f
+from repro.api import VeerConfig, verify
+from repro.core import dag as D
+from repro.core.dag import DataflowDAG, Link, Operator
+from repro.core.ev.cache import VerdictCache
+from repro.service.pair_cache import PairEntry, PairVerdictCache
+from repro.service.synthetic import make_chain
+
+op = Operator.make
+
+
+# ---------------------------------------------------------------------------
+# VerdictCache under many threads
+# ---------------------------------------------------------------------------
+
+
+def test_verdict_cache_concurrent_put_get_no_lost_updates(tmp_path):
+    cache = VerdictCache(str(tmp_path / "verdicts.json"))
+    n_threads, per_thread = 8, 200
+    errors = []
+
+    def hammer(t):
+        try:
+            for i in range(per_thread):
+                cache.put(f"ev{t}", f"fp{i}", i % 3 == 0, 0.001 * i)
+                # interleave reads of keys other threads are writing
+                cache.get(f"ev{(t + 1) % n_threads}", f"fp{i}")
+                if i % 50 == 0:
+                    cache.save()
+        except Exception as e:  # pragma: no cover - the assertion is the point
+            errors.append(e)
+
+    threads = [threading.Thread(target=hammer, args=(t,)) for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    # no lost updates: every (ev, fp) pair written is present
+    assert len(cache) == n_threads * per_thread
+    cache.save()
+    # the file on disk is complete, valid JSON
+    reloaded = VerdictCache(str(tmp_path / "verdicts.json"))
+    assert len(reloaded) == n_threads * per_thread
+
+
+def test_verdict_cache_concurrent_saves_never_torn(tmp_path):
+    """Readers racing savers always load a complete snapshot."""
+    path = tmp_path / "verdicts.json"
+    cache = VerdictCache(str(path))
+    stop = threading.Event()
+    bad = []
+
+    def writer():
+        i = 0
+        while not stop.is_set():
+            cache.put("ev", f"fp{i}", True, 0.01)
+            cache.save()
+            i += 1
+
+    def reader():
+        while not stop.is_set():
+            if not path.exists():
+                continue
+            try:
+                json.loads(path.read_text())
+            except json.JSONDecodeError as e:
+                bad.append(e)
+
+    threads = [threading.Thread(target=writer) for _ in range(2)] + [
+        threading.Thread(target=reader) for _ in range(2)
+    ]
+    for t in threads:
+        t.start()
+    import time
+
+    time.sleep(0.5)
+    stop.set()
+    for t in threads:
+        t.join()
+    assert not bad, f"reader saw a torn cache file: {bad[0]}"
+
+
+# ---------------------------------------------------------------------------
+# atomic save: crash mid-write leaves the previous snapshot intact
+# ---------------------------------------------------------------------------
+
+
+def test_save_partial_write_leaves_previous_snapshot(tmp_path, monkeypatch):
+    """Regression for the pre-atomic ``save``: an exception partway through
+    serialization used to leave a truncated file; now the temp file takes
+    the damage and the target keeps the last complete snapshot."""
+    path = tmp_path / "verdicts.json"
+    cache = VerdictCache(str(path))
+    cache.put("ev", "fp-old", True, 0.5)
+    cache.save()
+    before = path.read_text()
+
+    cache.put("ev", "fp-new", False, 0.1)
+
+    def exploding_dump(obj, fh, *a, **kw):
+        fh.write('{"version":')  # partial bytes hit the TEMP file only
+        raise OSError("disk full")
+
+    monkeypatch.setattr(json, "dump", exploding_dump)
+    with pytest.raises(OSError):
+        cache.save()
+    monkeypatch.undo()
+
+    # the target file still holds the previous complete snapshot...
+    assert path.read_text() == before
+    assert VerdictCache(str(path))._entries.keys() == {("ev", "fp-old")}
+    # ...no temp debris is left behind...
+    assert [p.name for p in tmp_path.iterdir()] == ["verdicts.json"]
+    # ...and a later save lands the new entry normally
+    cache.save()
+    assert ("ev", "fp-new") in VerdictCache(str(path))
+
+
+# ---------------------------------------------------------------------------
+# parallel window dispatch == sequential, byte for byte
+# ---------------------------------------------------------------------------
+
+
+def _swap_pair():
+    """An equivalent pair with several windows (filter swap on one branch
+    of a multi-branch dataflow) — enough windows for the pool to matter."""
+    chain = make_chain(6)
+    return chain[0], chain[1]
+
+
+def test_parallel_dispatch_matches_sequential_certificates():
+    P, Q = _swap_pair()
+    seq = verify(P, Q, VeerConfig(evs=("equitas", "spes", "udp")))
+    par = verify(
+        P, Q, VeerConfig(evs=("equitas", "spes", "udp"), max_workers=4)
+    )
+    assert seq.verdict is True and par.verdict is True
+    assert seq.certificate.to_json() == par.certificate.to_json()
+    assert par.certificate.replay(P=P, Q=Q).ok
+
+
+def test_parallel_dispatch_matches_along_whole_chain():
+    chain = make_chain(8)
+    cfg = VeerConfig(evs=("equitas", "spes", "udp"))
+    for a, b in zip(chain, chain[1:]):
+        seq = verify(a, b, cfg)
+        par = verify(a, b, cfg.replace(max_workers=3))
+        assert seq.verdict == par.verdict
+        assert (seq.certificate is None) == (par.certificate is None)
+        if seq.certificate is not None:
+            assert seq.certificate.to_json() == par.certificate.to_json()
+
+
+def test_parallel_dispatch_inequivalent_pair():
+    """A refuted pair: parallel mode must reproduce the False witness."""
+    def build(thresh):
+        return DataflowDAG(
+            [op("src", D.SOURCE, schema=SCHEMA),
+             f("flt", "a", ">", thresh),
+             op("sink", D.SINK, semantics=D.BAG)],
+            [Link("src", "flt"), Link("flt", "sink")],
+        )
+
+    P, Q = build(2), build(3)  # different thresholds: not equivalent
+    cfg = VeerConfig(evs=("equitas", "spes", "udp"))
+    seq = verify(P, Q, cfg)
+    par = verify(P, Q, cfg.replace(max_workers=4))
+    assert seq.verdict is False and par.verdict is False
+    assert seq.certificate.to_json() == par.certificate.to_json()
+
+
+def test_max_workers_validation():
+    from repro.api import ConfigError
+
+    with pytest.raises(ConfigError):
+        VeerConfig(max_workers=0).validate()
+    with pytest.raises(ConfigError):
+        VeerConfig(max_workers=-2).validate()
+    cfg = VeerConfig(max_workers=2)
+    assert VeerConfig.from_json(cfg.to_json()) == cfg
+
+
+# ---------------------------------------------------------------------------
+# pair-verdict cache single-flight
+# ---------------------------------------------------------------------------
+
+
+def test_pair_cache_single_flight_coalesces():
+    cache = PairVerdictCache()
+    key = ("digest", None)
+    computed = []
+    barrier = threading.Barrier(4)
+    results = []
+
+    def worker():
+        barrier.wait()
+        entry, owner = cache.acquire(key)
+        if owner:
+            computed.append(1)
+            entry = PairEntry(True, None, 3, 0.1)
+            cache.publish(key, entry)
+        results.append(entry)
+
+    threads = [threading.Thread(target=worker) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert len(computed) == 1  # exactly one owner computed
+    assert all(r is None or r.verdict is True for r in results)
+    stats = cache.stats()
+    assert stats["misses"] == 1
+    assert stats["hits"] + stats["coalesced"] == 3
+
+
+def test_pair_cache_abandoned_key_disables_coalescing():
+    """After an Unknown-verdict abandon, concurrent submitters must NOT
+    serialize behind one owner — everyone computes immediately."""
+    cache = PairVerdictCache()
+    key = ("digest", None)
+    _, owner = cache.acquire(key)
+    assert owner
+    cache.abandon(key)
+    # both become owners without blocking (no event to wait on)
+    e1, o1 = cache.acquire(key)
+    e2, o2 = cache.acquire(key)
+    assert (e1, o1) == (None, True) and (e2, o2) == (None, True)
+    # a later decided verdict lifts the marker and coalescing resumes
+    cache.publish(key, PairEntry(True, None, 1, 0.1))
+    entry, owner = cache.acquire(key)
+    assert not owner and entry.verdict is True
+
+
+def test_pair_cache_is_bounded():
+    cache = PairVerdictCache(max_entries=3)
+    for i in range(10):
+        key = (f"digest{i}", None)
+        _, owner = cache.acquire(key)
+        assert owner
+        cache.publish(key, PairEntry(True, None, 1, 0.1))
+    assert len(cache) == 3
+    # FIFO: the newest entries survive
+    assert cache.peek(("digest9", None)) is not None
+    assert cache.peek(("digest0", None)) is None
+
+
+def test_pair_cache_abandon_hands_off_to_a_waiter():
+    cache = PairVerdictCache()
+    key = ("digest", None)
+    entry, owner = cache.acquire(key)
+    assert owner and entry is None
+
+    got = []
+
+    def waiter():
+        e, own = cache.acquire(key)
+        if own:  # the abandon promoted this thread to owner
+            cache.publish(key, PairEntry(False, None, 0, 0.0))
+            e = cache.peek(key)
+        got.append(e)
+
+    t = threading.Thread(target=waiter)
+    t.start()
+    cache.abandon(key)  # first owner gives up (e.g. Unknown verdict)
+    t.join(timeout=5)
+    assert not t.is_alive()
+    assert got and got[0].verdict is False

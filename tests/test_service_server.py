@@ -1,0 +1,273 @@
+"""``VerificationService``: ordering, correctness, backpressure, errors.
+
+The service contract (repro/service/server.py): jobs of one client run
+strictly in submission order (a chain session is stateful); jobs of
+different clients run concurrently over shared caches; every decided pair
+keeps a certificate that replays green; a full queue pushes back instead of
+buffering; a failing job poisons only its own future, never a worker.
+"""
+
+import threading
+
+import pytest
+
+from repro.api import VeerConfig
+from repro.service import (
+    ServiceBusy,
+    ServiceClosed,
+    VerificationService,
+    VersionChainSession,
+)
+from repro.service.synthetic import make_chain
+
+CONFIG = VeerConfig(evs=("equitas", "spes", "udp"))
+
+
+def _sequential_verdicts(chain):
+    session = VersionChainSession(config=CONFIG)
+    for v in chain:
+        session.submit(v)
+    return session.report().verdicts
+
+
+def test_service_matches_sequential_sessions():
+    chain = make_chain(6)
+    expected = _sequential_verdicts(chain)
+    with VerificationService(config=CONFIG, workers=4) as svc:
+        for v in chain:  # round-robin across clients
+            for c in range(3):
+                svc.submit(f"c{c}", v)
+        report = svc.drain()
+    assert not report.errors
+    assert len(report.sessions) == 3
+    for chain_report in report.sessions.values():
+        assert chain_report.verdicts == expected
+        assert all(p.certified for p in chain_report.pairs)
+        for p in chain_report.pairs:
+            assert p.certificate.replay().ok
+
+
+def test_per_client_submission_order_is_preserved():
+    """Pair k of a chain must verify (v_{k-1}, v_k) even when many workers
+    race — the per-session ticket gate serializes one client's jobs."""
+    chain = make_chain(8)
+    with VerificationService(config=CONFIG, workers=8) as svc:
+        futures = [svc.submit("solo", v) for v in chain]
+        report = svc.drain()
+    assert futures[0].result() is None  # first version: nothing to verify
+    indices = [f.result().index for f in futures[1:]]
+    assert indices == list(range(1, len(chain)))
+    assert report.sessions["solo"].verdicts == _sequential_verdicts(chain)
+
+
+def test_cross_client_pair_reuse_and_ev_sharing():
+    chain = make_chain(6)
+    with VerificationService(config=CONFIG, workers=2) as svc:
+        for c in range(4):  # client-by-client: maximal reuse for later ones
+            for v in chain:
+                svc.submit(f"c{c}", v)
+        report = svc.drain()
+    assert not report.errors
+    # at least the later clients' pairs are answered from the pair cache
+    assert report.reused_pairs >= 2 * (len(chain) - 1)
+    # a coalesced waiter re-acquires after the owner publishes, so every
+    # reused pair lands exactly one hit (coalesced is the wait count)
+    assert report.pair_cache_stats["hits"] == report.reused_pairs
+    # reused pairs still carry replayable certificates
+    for chain_report in report.sessions.values():
+        for p in chain_report.pairs:
+            if p.reused:
+                assert p.certificate is not None and p.certificate.replay().ok
+
+
+def test_submit_pair_one_shot():
+    chain = make_chain(4)
+    with VerificationService(config=CONFIG, workers=2) as svc:
+        f1 = svc.submit_pair(chain[0], chain[1])
+        f2 = svc.submit_pair(chain[0], chain[1])  # duplicate: coalesces
+        r1, r2 = f1.result(timeout=60), f2.result(timeout=60)
+    assert r1.equivalent and r2.equivalent
+    assert r1.certificate.to_json() == r2.certificate.to_json()
+    assert r1.certificate.replay().ok
+    # exactly one ran the search; the other reused its verdict + certificate
+    assert int(r1.reused) + int(r2.reused) == 1
+
+
+def test_backpressure_raises_service_busy_without_blocking():
+    from concurrent.futures import Future
+
+    from repro.service.server import _Job
+
+    chain = make_chain(3)
+    svc = VerificationService(config=CONFIG, workers=1, queue_size=1)
+    gate = threading.Event()
+    try:
+        # occupy the only worker with a gated job, then fill the queue: the
+        # service is now saturated deterministically
+        blocker = _Job(client=None, ticket=0, fn=lambda: gate.wait(30), future=Future())
+        with svc._lock:
+            svc._pending += 1  # manual enqueue bypasses _enqueue's accounting
+        svc._queue.put(blocker)
+        f0 = svc.submit("c", chain[0])
+        with pytest.raises(ServiceBusy):
+            svc.submit("c", chain[1], block=False)
+        gate.set()
+        # the rejected job's ticket was abandoned: the chain must continue
+        # in order with the next accepted submission
+        f1 = svc.submit("c", chain[1])
+        report = svc.drain()
+        assert f0.result(timeout=60) is None
+        assert f1.result(timeout=60).index == 1
+        assert f1.result(timeout=60).verdict is True
+        assert report.sessions["c"].verdicts == [True]
+        # the rejection was reported to the caller via the raise; it must
+        # NOT be re-reported forever through drain().errors
+        assert report.errors == []
+    finally:
+        gate.set()
+        svc.close(save=False)
+
+
+def test_job_error_is_isolated_to_its_future():
+    chain = make_chain(4)
+    with VerificationService(config=CONFIG, workers=2) as svc:
+        bad = svc.submit("c", "not a dag")  # type: ignore[arg-type]
+        with pytest.raises(Exception):
+            bad.result(timeout=60)
+        # the worker survived and the client's chain continues
+        ok = [svc.submit("c", v) for v in chain]
+        report = svc.drain()
+    assert ok[0].result(timeout=60) is None
+    assert all(f.result(timeout=60) is not None for f in ok[1:])
+    assert len(report.errors) == 1
+
+
+def test_cancelled_future_is_skipped_and_workers_survive():
+    """Cancelling a queued job must not kill the worker (set_result on a
+    cancelled Future raises) nor wedge the client's later jobs."""
+    from concurrent.futures import Future
+
+    from repro.service.server import _Job
+
+    chain = make_chain(4)
+    svc = VerificationService(config=CONFIG, workers=1)
+    gate = threading.Event()
+    try:
+        blocker = _Job(client=None, ticket=0, fn=lambda: gate.wait(30), future=Future())
+        with svc._lock:
+            svc._pending += 1  # manual enqueue bypasses _enqueue's accounting
+        svc._queue.put(blocker)  # occupy the only worker: submits stay queued
+        f0 = svc.submit("c", chain[0])
+        f1 = svc.submit("c", chain[1])
+        assert f1.cancel()  # still queued -> cancellable
+        gate.set()
+        f2 = svc.submit("c", chain[2])
+        report = svc.drain()
+        assert f0.result(timeout=60) is None
+        # the cancelled version dropped out of the chain; the next pair
+        # verifies (chain[0], chain[2]) and the worker is still alive
+        assert f2.result(timeout=60).index == 1
+        assert report.errors == []  # a cancellation is not a service error
+        assert len(report.sessions["c"].pairs) == 1
+    finally:
+        gate.set()
+        svc.close(save=False)
+
+
+def test_submit_after_close_raises():
+    svc = VerificationService(config=CONFIG, workers=1)
+    svc.close(save=False)
+    with pytest.raises(ServiceClosed):
+        svc.submit("c", make_chain(2)[0])
+    with pytest.raises(ServiceClosed):
+        svc.submit_pair(*make_chain(2)[:2])
+
+
+def test_shared_verdict_cache_persists_atomically(tmp_path):
+    """The service's shared window-verdict cache saves on close and warms
+    the next service instance."""
+    chain = make_chain(5)
+    path = str(tmp_path / "verdicts.json")
+    cfg = CONFIG.replace(cache_path=path)
+    with VerificationService(config=cfg, workers=2) as svc:
+        for v in chain:
+            svc.submit("c", v)
+        first = svc.drain()
+    assert first.total_ev_calls > 0
+
+    with VerificationService(config=cfg, workers=2) as svc2:
+        for v in chain:
+            svc2.submit("c", v)
+        warm = svc2.drain()
+    assert warm.total_ev_calls == 0  # fully answered from the persisted cache
+    assert all(
+        p.certified for r in warm.sessions.values() for p in r.pairs
+    )
+
+
+def test_drain_is_repeatable_and_concurrent_with_submits():
+    chain = make_chain(4)
+    with VerificationService(config=CONFIG, workers=2) as svc:
+        for v in chain:
+            svc.submit("a", v)
+        r1 = svc.drain()
+        for v in chain:
+            svc.submit("b", v)
+        r2 = svc.drain()
+    assert len(r1.sessions) == 1
+    assert len(r2.sessions) == 2
+    assert r2.sessions["b"].verdicts == r1.sessions["a"].verdicts
+
+
+def test_concurrent_submitters_same_client_never_deadlock():
+    """Regression: ticket allocation and queue insertion are atomic per
+    client.  Racing submitters used to be able to enqueue tickets out of
+    order, wedging every worker on a gate whose predecessor was still in
+    the queue; the service must always run to completion instead."""
+    chain = make_chain(5)
+    svc = VerificationService(config=CONFIG, workers=2, queue_size=4)
+    try:
+        def burst():
+            for v in chain:
+                svc.submit("c", v)
+
+        threads = [threading.Thread(target=burst) for _ in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        report = svc.drain()  # must terminate (the old bug hung here)
+        # 4 bursts x 5 versions = 20 submissions -> 19 pairs, all decided
+        assert len(report.sessions["c"].pairs) == 19
+    finally:
+        svc.close(save=False)
+
+
+def test_ticket_gate_under_many_threads_submitting():
+    """Multiple producer threads feeding one client still serialize that
+    client's jobs; the service never interleaves a session."""
+    chain = make_chain(6)
+    svc = VerificationService(config=CONFIG, workers=4)
+    lock = threading.Lock()
+    idx = [0]
+
+    def producer():
+        while True:
+            # index claim and submit under one lock: the *intended* order is
+            # the submission order, which the ticket gate must then preserve
+            # against the racing worker pool
+            with lock:
+                i = idx[0]
+                if i >= len(chain):
+                    return
+                idx[0] += 1
+                svc.submit("shared", chain[i])
+
+    threads = [threading.Thread(target=producer) for _ in range(3)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    report = svc.drain()
+    svc.close(save=False)
+    assert report.sessions["shared"].verdicts == _sequential_verdicts(chain)
