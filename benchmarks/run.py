@@ -1,11 +1,17 @@
 """Benchmark driver — one section per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV lines (scaffold contract) after each
-section's human-readable output.
+section's human-readable output.  ``--json BENCH_<name>.json`` additionally
+writes the summary as machine-readable JSON (one object per section:
+``{"us_per_call": ..., "derived": ...}``) — the same format family as the
+committed ``benchmarks/BENCH_search.json`` baseline the CI perf-smoke job
+guards against.
 """
 
 from __future__ import annotations
 
+import argparse
+import json
 import sys
 import time
 
@@ -16,10 +22,18 @@ def _csv(name: str, seconds: float, derived: str) -> str:
 
 def main() -> None:
     sys.path.insert(0, ".")
+    ap = argparse.ArgumentParser(description="run all benchmark sections")
+    ap.add_argument(
+        "--json",
+        metavar="BENCH_<name>.json",
+        help="write the section summaries as JSON to this path",
+    )
+    args = ap.parse_args()
     from benchmarks import (
         chain_bench,
         figs_scaling,
         roofline_bench,
+        search_bench,
         service_bench,
         table1_ev_support,
         table5_comparison,
@@ -102,6 +116,18 @@ def main() -> None:
         f"replay_ok={r['replay_ok_pct']:.0f}%",
     ))
 
+    print("\n== Search kernel: bitmask vs reference decompositions/sec ==")
+    t0 = time.perf_counter()
+    _, headline = search_bench.run(
+        sizes=search_bench.SMOKE_SIZES, budget=search_bench.SMOKE_BUDGET
+    )
+    csv_lines.append(_csv(
+        "search_bench", time.perf_counter() - t0,
+        f"decomps_per_sec={headline['bitmask_decomps_per_sec']:.0f} "
+        f"speedup={headline['speedup']:.1f}x "
+        f"@{headline['changes']}changes",
+    ))
+
     print("\n== Roofline table (single-pod baseline) ==")
     t0 = time.perf_counter()
     rows = roofline_bench.run()
@@ -118,6 +144,16 @@ def main() -> None:
     print("name,us_per_call,derived")
     for line in csv_lines:
         print(line)
+
+    if args.json:
+        sections = {}
+        for line in csv_lines:
+            name, us, derived = line.split(",", 2)
+            sections[name] = {"us_per_call": float(us), "derived": derived}
+        with open(args.json, "w") as f:
+            json.dump({"name": "run", "sections": sections}, f, indent=2)
+            f.write("\n")
+        print(f"wrote {args.json}")
 
 
 if __name__ == "__main__":

@@ -18,7 +18,7 @@ from typing import Any, Dict, Optional, Tuple
 from repro.api.registry import DEFAULT_EV_NAMES, EVRegistry, default_registry
 from repro.core import dag as D
 from repro.core.ev.cache import VerdictCache
-from repro.core.verifier import Veer
+from repro.core.verifier import SEARCH_BACKENDS, Veer
 
 _FLAG_FIELDS = (
     "segmentation",
@@ -59,9 +59,17 @@ class VeerConfig:
     # of each candidate decomposition concurrently (verdicts are committed
     # in deterministic order, so certificates match the sequential run)
     max_workers: int = 1
+    # decomposition-search representation: "bitmask" (interned integer
+    # windows, the fast kernel) or "reference" (retained frozenset search —
+    # the semantics oracle used by tests and benchmarks)
+    search_backend: str = "bitmask"
     # environment
     semantics: str = D.BAG
     cache_path: Optional[str] = None
+    # LRU bound on the verdict/validity tables of the cache this config
+    # creates (None = unbounded); applies to caches built from cache_path —
+    # an explicitly passed cache keeps its own bound
+    cache_max_entries: Optional[int] = None
 
     # -- presets -------------------------------------------------------------
     @staticmethod
@@ -95,6 +103,19 @@ class VeerConfig:
             v = getattr(self, f)
             if not isinstance(v, int) or v <= 0:
                 raise ConfigError(f"{f} must be a positive int, got {v!r}")
+        if self.cache_max_entries is not None and (
+            not isinstance(self.cache_max_entries, int)
+            or self.cache_max_entries <= 0
+        ):
+            raise ConfigError(
+                f"cache_max_entries must be a positive int or None, "
+                f"got {self.cache_max_entries!r}"
+            )
+        if self.search_backend not in SEARCH_BACKENDS:
+            raise ConfigError(
+                f"search_backend must be one of {SEARCH_BACKENDS}, "
+                f"got {self.search_backend!r}"
+            )
         if self.semantics not in (D.SET, D.BAG, D.ORDERED):
             raise ConfigError(f"bad semantics {self.semantics!r}")
         return self
@@ -114,13 +135,16 @@ class VeerConfig:
         registry = registry if registry is not None else default_registry()
         self.validate(registry)
         if cache is None and self.cache_path is not None:
-            cache = VerdictCache(self.cache_path)
+            cache = VerdictCache(
+                self.cache_path, max_entries=self.cache_max_entries
+            )
         return Veer(
             registry.build(list(self.evs)),
             **{f: getattr(self, f) for f in _FLAG_FIELDS},
             **{f: getattr(self, f) for f in _BUDGET_FIELDS},
             max_workers=self.max_workers,
             verdict_cache=cache,
+            search_backend=self.search_backend,
         )
 
     # -- serialization -------------------------------------------------------

@@ -98,8 +98,18 @@ class Operator:
         return Operator(self.id, self.op_type, tuple(sorted(p.items())))
 
     def signature(self) -> Tuple:
-        """Type+properties (identity-free) — equal signatures ⇒ same computation."""
-        return (self.op_type, _canon(self.props))
+        """Type+properties (identity-free) — equal signatures ⇒ same computation.
+
+        Memoized per instance (frozen-safe): operators are shared between a
+        DAG and every window sub-DAG induced from it, and the search kernel's
+        fingerprint/identity checks hit ``signature`` on every distinct
+        window — canonicalizing the property tree once per operator instead
+        of once per visit is one of the larger wins on warm searches."""
+        sig = self.__dict__.get("_signature")
+        if sig is None:
+            sig = (self.op_type, _canon(self.props))
+            object.__setattr__(self, "_signature", sig)
+        return sig
 
     def arity(self) -> int:
         if self.op_type == SOURCE:

@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import itertools
 from dataclasses import dataclass
+from functools import cached_property
 from typing import Dict, FrozenSet, Iterable, List, Mapping, Optional, Sequence, Set, Tuple
 
 from repro.core.dag import DAGError, DataflowDAG, Link, Operator
@@ -131,11 +132,16 @@ class EditMapping:
             raise ValueError("mapping not injective")
         return EditMapping(tuple(sorted(pairs.items())))
 
-    @property
+    # cached_property writes straight into __dict__, which bypasses the
+    # frozen-dataclass __setattr__ guard — equality/hash still use only
+    # p_to_q.  The search kernel reads these maps in inner loops (boundary
+    # checks, identity payloads), so rebuilding a dict per access showed up
+    # in profiles.  Callers must not mutate the returned dicts.
+    @cached_property
     def forward(self) -> Dict[str, str]:
         return dict(self.p_to_q)
 
-    @property
+    @cached_property
     def backward(self) -> Dict[str, str]:
         return {q: p for p, q in self.p_to_q}
 

@@ -23,6 +23,23 @@ verdict an individual EV returns, so per-EV entries stay valid.
 (attribute access proxies to the wrapped EV) whose ``check`` consults the
 cache first and records hit/miss/time-saved statistics.
 
+Besides verdicts the store memoizes **validity**: ``(ev name, fingerprint)``
+→ ``ev.validate(query_pair)``.  Restriction checks looked free next to EV
+decision procedures, but the decomposition search validates every distinct
+window it forms — on search-dominated workloads (cache-warm 12-change pairs,
+``benchmarks/search_bench.py``) Equitas' normalize-based restrictions were
+the single largest cost.  The same soundness argument as for verdicts
+applies: fingerprints capture the whole pair including semantics, and
+``validate`` is deterministic and id-invariant.  The bitmask search kernel
+consults this table through the window's interned fingerprint; the retained
+reference backend deliberately does not (it preserves pre-kernel behavior
+as the benchmark baseline).
+
+Memory: ``max_entries`` bounds the verdict and validity tables with LRU
+eviction (``get`` refreshes recency, ``put`` evicts the stalest entries),
+so a long-running ``VerificationService`` cannot grow without limit;
+``evictions`` counts what was dropped.
+
 Concurrency: one ``VerdictCache`` may back many verifier threads — the
 parallel window dispatch inside a single ``Veer`` (``max_workers > 1``) and
 the worker pool of a ``repro.service.server.VerificationService`` both hit
@@ -42,6 +59,7 @@ import stat
 import tempfile
 import threading
 import time
+from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Dict, Iterable, Optional, Tuple
 
@@ -67,11 +85,24 @@ class VerdictCache:
     With a ``path`` the cache loads eagerly and ``save()`` writes a compact
     JSON file — drop it next to ``ReuseManager``'s content-addressed store to
     share one directory of reusable artifacts (materializations + verdicts).
+
+    ``max_entries`` (None = unbounded) caps the verdict and validity tables
+    *each* at that many entries, evicting least-recently-used first.
     """
 
-    def __init__(self, path: Optional[str] = None, *, autoload: bool = True):
+    def __init__(
+        self,
+        path: Optional[str] = None,
+        *,
+        autoload: bool = True,
+        max_entries: Optional[int] = None,
+    ):
+        if max_entries is not None and max_entries <= 0:
+            raise ValueError(f"max_entries must be positive, got {max_entries}")
         self.path = pathlib.Path(path).expanduser() if path is not None else None
-        self._entries: Dict[Tuple[str, str], CacheEntry] = {}
+        self.max_entries = max_entries
+        self._entries: "OrderedDict[Tuple[str, str], CacheEntry]" = OrderedDict()
+        self._validity: "OrderedDict[Tuple[str, str], bool]" = OrderedDict()
         self._dirty = False
         # single writer lock: every read/write of _entries, _dirty and the
         # counters goes through it, so one store can back many threads
@@ -80,16 +111,31 @@ class VerdictCache:
         self.hits = 0
         self.misses = 0
         self.time_saved = 0.0
+        self.evictions = 0
+        self.validity_hits = 0
+        self.validity_misses = 0
         if self.path is not None and autoload and self.path.exists():
             self.load()
 
     # -- core map ------------------------------------------------------------
+    def _evict(self, table: OrderedDict) -> None:
+        """Drop least-recently-used entries past ``max_entries`` (locked by
+        the caller).  Evicted entries leave the persisted snapshot too."""
+        if self.max_entries is None:
+            return
+        while len(table) > self.max_entries:
+            table.popitem(last=False)
+            self.evictions += 1
+            self._dirty = True
+
     def get(self, ev_name: str, fingerprint: str) -> Optional[CacheEntry]:
+        key = (ev_name, fingerprint)
         with self._lock:
-            entry = self._entries.get((ev_name, fingerprint))
+            entry = self._entries.get(key)
             if entry is None:
                 self.misses += 1
                 return None
+            self._entries.move_to_end(key)  # LRU refresh
             self.hits += 1
             self.time_saved += entry.elapsed
             return entry
@@ -107,12 +153,36 @@ class VerdictCache:
             if self._entries.get(key) != entry:
                 self._entries[key] = entry
                 self._dirty = True
+            self._entries.move_to_end(key)
+            self._evict(self._entries)
 
     def covers(self, ev_names: Iterable[str], fingerprint: str) -> bool:
         """True iff every named EV's verdict for this pair is memoized —
         i.e. the window can be fully resolved without any EV call."""
         with self._lock:
             return all((n, fingerprint) in self._entries for n in ev_names)
+
+    # -- validity map ----------------------------------------------------------
+    def get_validity(self, ev_name: str, fingerprint: str) -> Optional[bool]:
+        """Memoized ``ev.validate(query_pair)`` result, or None on a miss."""
+        key = (ev_name, fingerprint)
+        with self._lock:
+            ok = self._validity.get(key)
+            if ok is None:
+                self.validity_misses += 1
+                return None
+            self._validity.move_to_end(key)
+            self.validity_hits += 1
+            return ok
+
+    def put_validity(self, ev_name: str, fingerprint: str, valid: bool) -> None:
+        key = (ev_name, fingerprint)
+        with self._lock:
+            if self._validity.get(key) is not valid:
+                self._validity[key] = valid
+                self._dirty = True
+            self._validity.move_to_end(key)
+            self._evict(self._validity)
 
     def __len__(self) -> int:
         with self._lock:
@@ -141,6 +211,7 @@ class VerdictCache:
             if target == self.path and not self._dirty:
                 return  # nothing new since the last write: skip the I/O
             entries = sorted(self._entries.items())
+            validity = sorted(self._validity.items())
             if target == self.path:
                 # claim the snapshot now; restored below if the write fails
                 self._dirty = False
@@ -150,6 +221,7 @@ class VerdictCache:
                 [ev, fp, _VERDICT_TO_JSON[e.verdict], round(e.elapsed, 6)]
                 for (ev, fp), e in entries
             ],
+            "validity": [[ev, fp, ok] for (ev, fp), ok in validity],
         }
         target.parent.mkdir(parents=True, exist_ok=True)
         fd, tmp_name = tempfile.mkstemp(
@@ -201,7 +273,17 @@ class VerdictCache:
                     n += 1
             except (KeyError, TypeError, ValueError):
                 pass  # malformed row: keep what parsed, start cold for the rest
-            if n and target != self.path:
+            nv = 0
+            try:
+                # optional section (absent in pre-validity snapshots)
+                for ev, fp, ok in payload.get("validity", ()):
+                    self._validity[(ev, fp)] = bool(ok)
+                    nv += 1
+            except (TypeError, ValueError):
+                pass
+            self._evict(self._entries)
+            self._evict(self._validity)
+            if (n or nv) and target != self.path:
                 self._dirty = True  # merged foreign entries not yet on self.path
         return n
 
@@ -209,8 +291,13 @@ class VerdictCache:
         with self._lock:
             return {
                 "entries": len(self._entries),
+                "validity_entries": len(self._validity),
+                "max_entries": self.max_entries,
                 "hits": self.hits,
                 "misses": self.misses,
+                "evictions": self.evictions,
+                "validity_hits": self.validity_hits,
+                "validity_misses": self.validity_misses,
                 "time_saved": self.time_saved,
             }
 

@@ -20,9 +20,21 @@ def segment_score(num_units: int, num_changes: int) -> int:
 def decomposition_score(
     covering: Sequence[FrozenSet[int]], universe_size: int
 ) -> float:
-    if not covering:
+    return decomposition_score_from_sizes(
+        [len(w) for w in covering], universe_size
+    )
+
+
+def decomposition_score_from_sizes(
+    sizes: Sequence[int], universe_size: int
+) -> float:
+    """G(d) from window *sizes* alone — the bitmask search kernel scores
+    decompositions from interned popcounts without materializing sets.
+    Bit-identical to ``decomposition_score`` (same integer sums, same float
+    division), which the search-equivalence property test relies on."""
+    if not sizes:
         return 0.0
-    covered = sum(len(w) for w in covering)
-    o_d = covered / len(covering)
+    covered = sum(sizes)
+    o_d = covered / len(sizes)
     w_d = universe_size - covered  # unmerged singleton windows
     return o_d - w_d

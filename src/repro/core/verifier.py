@@ -10,6 +10,15 @@ Soundness: True only via Lemma 5.3 (every covering window of a decomposition
 EV-verified equivalent) or Lemma 4.1; False only from (a) the §7.4 symbolic
 witness or (b) an inequivalence-capable EV on a window spanning the entire
 version pair (Theorem 5.8).
+
+The decomposition search itself (Algorithm 2) runs on the **bitmask kernel**
+by default: windows are interned integer ids into a
+``repro.core.window.WindowTable``, neighbor/subsumption/connectivity checks
+are big-int instructions, and the explored/dead/verdict sets hash small
+ints.  ``search_backend="reference"`` selects the retained frozenset
+implementation (``repro.core.search_ref``) — same canonical exploration
+order, same verdicts, byte-identical certificates, an order of magnitude
+slower.  See docs/PERFORMANCE.md.
 """
 
 from __future__ import annotations
@@ -26,12 +35,19 @@ from repro.core import dag as D
 from repro.core.dag import DataflowDAG
 from repro.core.edits import EditMapping, enumerate_mappings, identity_mapping
 from repro.core.ev.base import BaseEV, QueryPair
-from repro.core.ev.cache import CachedEV, VerdictCache, wrap_evs
-from repro.core.ranking import decomposition_score, segment_score
+from repro.core.ev.cache import VerdictCache, wrap_evs
+from repro.core.ranking import decomposition_score_from_sizes, segment_score
+from repro.core.search_ref import (
+    BaseSearchContext,
+    SetSearchContext,
+    ref_algorithm2,
+)
 from repro.core.symbolic import quick_inequivalent
-from repro.core.window import Change, VersionPair, identical_under_mapping
+from repro.core.window import Change, VersionPair, WindowTable
 
 TRUE, FALSE, UNKNOWN = True, False, None
+
+SEARCH_BACKENDS = ("bitmask", "reference")
 
 
 @dataclass
@@ -91,13 +107,16 @@ class _EvidenceCollector:
     def __init__(self) -> None:
         self.kind: Optional[str] = None
         self.pair: Optional[VersionPair] = None
-        self.ctx: Optional["_SearchContext"] = None
+        self.ctx: Optional[BaseSearchContext] = None
         self.sink_pairs: Tuple[Tuple[str, str], ...] = ()
 
 
 @dataclass
 class VeerStats:
     decompositions_explored: int = 0
+    # frontier pushes suppressed by the decomposition budget (the heap is
+    # bounded so explored + frontier never exceeds max_decompositions)
+    pushes_skipped: int = 0
     windows_formed: int = 0
     windows_verified: int = 0
     ev_calls: int = 0
@@ -127,9 +146,15 @@ class Veer:
     thread pool, then their verdicts are committed in the deterministic
     planned order, so verdicts, provenance and certificates are identical to
     the sequential run regardless of thread completion order (see
-    ``_SearchContext.prefetch``).  The search itself stays single-threaded —
+    ``BaseSearchContext.prefetch``).  The search itself stays single-threaded —
     Algorithm 2's frontier is inherently sequential; the EV calls are the
     cost worth spreading.
+
+    ``search_backend`` selects the decomposition-search representation:
+    ``"bitmask"`` (default — interned integer windows, the fast kernel) or
+    ``"reference"`` (the retained frozenset implementation).  Both produce
+    identical verdicts, stats and certificates; the reference backend exists
+    as the semantics oracle for tests and benchmarks.
     """
 
     def __init__(
@@ -148,7 +173,14 @@ class Veer:
         mapping_limit: int = 8,
         max_workers: int = 1,
         verdict_cache: Optional[VerdictCache] = None,
+        search_backend: str = "bitmask",
     ):
+        if search_backend not in SEARCH_BACKENDS:
+            raise ValueError(
+                f"search_backend must be one of {SEARCH_BACKENDS}, "
+                f"got {search_backend!r}"
+            )
+        self.search_backend = search_backend
         self.verdict_cache = verdict_cache
         self.evs = wrap_evs(evs, verdict_cache)
         self.segmentation = segmentation
@@ -286,7 +318,7 @@ class Veer:
             coll.sink_pairs = tuple(sink_pairs)
             return FALSE
 
-        ctx = _SearchContext(pair, self.evs, stats, self.verdict_cache)
+        ctx = self._make_context(pair, stats)
         coll.ctx = ctx
 
         if self.segmentation:
@@ -329,7 +361,7 @@ class Veer:
 
     # ------------------------------------------------------------ segmentation
     def _segment(
-        self, pair: VersionPair, ctx: "_SearchContext"
+        self, pair: VersionPair, ctx: BaseSearchContext
     ) -> Optional[List[Tuple[Set[int], List[Change]]]]:
         """§7.1 method 2: boundaries at operators no EV supports."""
         supported = set()
@@ -377,32 +409,82 @@ class Veer:
         return segments
 
     # ------------------------------------------------------------- Algorithm 2
+    def _make_context(self, pair: VersionPair, stats: VeerStats) -> BaseSearchContext:
+        if self.search_backend == "reference":
+            return SetSearchContext(pair, self.evs, stats, self.verdict_cache)
+        return _SearchContext(pair, self.evs, stats, self.verdict_cache)
+
     def _algorithm2(
+        self,
+        ctx: BaseSearchContext,
+        universe: FrozenSet[int],
+        changes: List[Change],
+    ) -> Optional[bool]:
+        if isinstance(ctx, SetSearchContext):
+            return ref_algorithm2(self, ctx, universe, changes)
+        return self._algorithm2_masks(ctx, universe, changes)
+
+    def _algorithm2_masks(
         self,
         ctx: "_SearchContext",
         universe: FrozenSet[int],
         changes: List[Change],
     ) -> Optional[bool]:
+        """Algorithm 2 on the bitmask kernel: windows are interned table ids,
+        decompositions are tuples of ids in canonical order, and the
+        inner-loop set algebra (neighbors, merge, subsumption, explored-set
+        keys) is big-int arithmetic.  Exploration order is bit-for-bit the
+        reference backend's (``repro.core.search_ref.ref_algorithm2``)."""
         stats = ctx.stats
-        initial = tuple(sorted({c.required_units for c in changes}, key=sorted))
-        start = _decomp_key(initial)
-        explored: Set[Tuple] = {start}
-        entire_pair = universe if len(universe) == len(ctx.pair.units) else None
+        pair = ctx.pair
+        table = ctx.table
+        intern = table.intern
+        masks = table.masks
+        keys = table.key
+        pops = table.pop
+        universe_mask = pair.mask_of(universe)
+        universe_size = len(universe)
+        max_decomps = self.max_decompositions
+        use_ranking = self.ranking
+
+        # anchor masks come from the precomputed per-change masks (``changes``
+        # may be a segment's subset of ``pair.changes``, so map by change)
+        mask_by_change = dict(zip(pair.changes, pair.change_masks))
+        initial = tuple(sorted(
+            {intern(m) for m in {mask_by_change[c] for c in changes}},
+            key=keys.__getitem__,
+        ))
+        explored: Set[Tuple[int, ...]] = {initial}
+        entire_id = (
+            intern(universe_mask) if universe_mask == pair.full_mask else None
+        )
 
         counter = itertools.count()
-        heap: List[Tuple[float, int, Tuple[FrozenSet[int], ...]]] = []
+        heap: List[Tuple[float, int, Tuple[int, ...]]] = []
 
-        def push(windows: Tuple[FrozenSet[int], ...]):
+        def push(ids: Tuple[int, ...]):
+            # frontier bound: never let explored + frontier exceed the budget.
+            # Under ranking this is lossy at the budget edge — a suppressed
+            # candidate might have outscored entries already in the heap — so
+            # a drained search with skipped pushes reports budget_exhausted
+            # (Unknown-is-budget-limited, never a wrong verdict).
+            if stats.decompositions_explored + len(heap) >= max_decomps:
+                stats.pushes_skipped += 1
+                return
             score = (
-                -decomposition_score(windows, len(universe)) if self.ranking else 0.0
+                -decomposition_score_from_sizes(
+                    [pops[i] for i in ids], universe_size
+                )
+                if use_ranking
+                else 0.0
             )
-            heapq.heappush(heap, (score, next(counter), windows))
+            heapq.heappush(heap, (score, next(counter), ids))
 
         push(initial)
         t_explore = time.perf_counter()
 
         while heap:
-            if stats.decompositions_explored >= self.max_decompositions:
+            if stats.decompositions_explored >= max_decomps:
                 stats.budget_exhausted = True
                 break
             _, _, windows = heapq.heappop(heap)
@@ -412,42 +494,46 @@ class Veer:
             # window can never verify — skip their (EV-expensive) verification
             # but keep EXPANDING them: other windows may merge the dead one
             # away into a larger window that does verify.
-            doomed = self.pruning and any(w in ctx.dead for w in windows)
+            dead = ctx.dead
+            doomed = self.pruning and any(w in dead for w in windows)
 
             if self.eager_verify and not doomed:
-                r = self._try_verify_decomposition(ctx, windows, entire_pair)
+                r = self._try_verify_decomposition(ctx, windows, entire_id)
                 if r is not UNKNOWN:
                     stats.explore_time += time.perf_counter() - t_explore
                     return r
 
-            unit_to_window = {}
-            for w in windows:
-                for u in w:
-                    unit_to_window[u] = w
+            owner: Dict[int, int] = {}
+            for wid in windows:
+                for u in keys[wid]:
+                    owner[u] = wid
 
             all_marked = True
-            for w in windows:
-                neighbors = ctx.pair.neighbors(w) & universe
-                candidates: Set[FrozenSet[int]] = set()
-                for u in neighbors:
-                    target = unit_to_window.get(u)
-                    merged = w | (target if target is not None else frozenset([u]))
-                    candidates.add(merged)
-                expanded_any = False
-                for merged in candidates:
-                    if not self._accept_window(ctx, merged):
-                        continue
-                    new_windows = tuple(
-                        sorted(
-                            {x for x in windows if not (x <= merged)} | {merged},
-                            key=sorted,
-                        )
+            for wid in windows:
+                w_mask = masks[wid]
+                frontier = table.neighbor_mask(wid) & universe_mask
+                cand_masks: Set[int] = set()
+                f = frontier
+                while f:
+                    low = f & -f
+                    f ^= low
+                    target = owner.get(low.bit_length() - 1)
+                    cand_masks.add(
+                        w_mask | (masks[target] if target is not None else low)
                     )
-                    key = _decomp_key(new_windows)
-                    if key in explored:
+                expanded_any = False
+                for mid in sorted(map(intern, cand_masks), key=keys.__getitem__):
+                    if not self._accept_window_id(ctx, mid):
+                        continue
+                    merged_mask = masks[mid]
+                    new_windows = tuple(sorted(
+                        [x for x in windows if masks[x] & ~merged_mask] + [mid],
+                        key=keys.__getitem__,
+                    ))
+                    if new_windows in explored:
                         expanded_any = True  # an accepted move exists
                         continue
-                    explored.add(key)
+                    explored.add(new_windows)
                     push(new_windows)
                     expanded_any = True
                 if not expanded_any:
@@ -455,31 +541,47 @@ class Veer:
                     # §7.2: verify immediately, remember refuted VALID windows
                     if (
                         self.pruning
-                        and w not in ctx.dead
-                        and ctx.valid_evs(w)
-                        and ctx.window_verdict(w) is not TRUE
+                        and wid not in dead
+                        and ctx.valid_evs(wid)
+                        and ctx.window_verdict(wid) is not TRUE
                     ):
-                        ctx.dead.add(w)
+                        dead.add(wid)
                         doomed = True
                 else:
                     all_marked = False
 
             if all_marked and not doomed:
-                r = self._try_verify_decomposition(ctx, windows, entire_pair)
+                r = self._try_verify_decomposition(ctx, windows, entire_id)
                 if r is not UNKNOWN:
                     stats.explore_time += time.perf_counter() - t_explore
                     return r
-            if all_marked and doomed and len(windows) == 1 and windows[0] == entire_pair:
+            if all_marked and doomed and len(windows) == 1 and windows[0] == entire_id:
                 # Alg 2 line 19: whole-pair window refuted by a capable EV
                 if ctx.window_verdict(windows[0]) is FALSE:
                     ctx.witness = windows[0]
                     stats.explore_time += time.perf_counter() - t_explore
                     return FALSE
 
+        if stats.pushes_skipped:
+            # the frontier bound suppressed work: the Unknown is budget-limited
+            stats.budget_exhausted = True
         stats.explore_time += time.perf_counter() - t_explore
         return UNKNOWN
 
-    def _accept_window(self, ctx: "_SearchContext", win: FrozenSet[int]) -> bool:
+    def _accept_window_id(self, ctx: "_SearchContext", wid: int) -> bool:
+        """Alg 2 line 9 policy on an interned window id (all checks cached
+        per id in the ``WindowTable`` — repeat encounters cost two list
+        reads)."""
+        table = ctx.table
+        if not table.connected(wid):
+            return False
+        if table.query_pair(wid) is None:
+            return True  # ill-formed: must keep growing
+        if ctx.valid_evs(wid):
+            return True
+        return self.relaxed_expansion
+
+    def _accept_window(self, ctx: SetSearchContext, win: FrozenSet[int]) -> bool:
         """Alg 2 line 9 policy. Ill-formed windows are always expandable
         (their boundary is incoherent — no EV could ever see them); formed
         windows must be valid for some EV, unless ``relaxed_expansion``
@@ -496,9 +598,9 @@ class Veer:
 
     def _try_verify_decomposition(
         self,
-        ctx: "_SearchContext",
-        windows: Tuple[FrozenSet[int], ...],
-        entire_pair: Optional[FrozenSet[int]],
+        ctx: BaseSearchContext,
+        windows: Tuple,
+        entire_pair,
     ) -> Optional[bool]:
         """Batched dispatch: resolve every window that needs no EV call first
         (memoized verdicts, then verdict-cache-covered windows), so a cached
@@ -558,14 +660,14 @@ class Veer:
             return TRUE, stats
         if len(pair.changes) != 1:
             raise ValueError("Algorithm 1 requires a single change")
-        ctx = _SearchContext(pair, self.evs, stats, self.verdict_cache)
+        ctx = SetSearchContext(pair, self.evs, stats, self.verdict_cache)
         verdict, _ = self._algorithm1(ctx, pair.changes[0])
         stats.total_time = time.perf_counter() - t0
         stats.verdict = verdict
         return verdict, stats
 
     def _algorithm1(
-        self, ctx: "_SearchContext", change: Change
+        self, ctx: SetSearchContext, change: Change
     ) -> Tuple[Optional[bool], List[FrozenSet[int]]]:
         pair = ctx.pair
         universe = frozenset(range(len(pair.units)))
@@ -614,39 +716,19 @@ class Veer:
         pair = VersionPair(P, Q, m, semantics)
         if len(pair.changes) != 1:
             raise ValueError("single change required")
-        ctx = _SearchContext(pair, self.evs, VeerStats(), self.verdict_cache)
+        ctx = SetSearchContext(pair, self.evs, VeerStats(), self.verdict_cache)
         _, mcws = self._algorithm1(ctx, pair.changes[0])
         return mcws
 
 
-@dataclass
-class _WindowOutcome:
-    """The result of checking one window, decoupled from shared state.
-
-    ``_compute_outcome`` produces these without touching the context's
-    memo/provenance/stats (so it can run on worker threads);
-    ``_commit_outcome`` applies them on the search thread in deterministic
-    planned order.  The stat deltas ride along so parallel runs account EV
-    calls exactly where the commit happens, not where the thread ran.
-    """
-
-    verdict: Optional[bool]
-    provenance: Optional[Tuple[str, Optional[str]]]
-    ev_calls: int = 0
-    ev_time: float = 0.0
-    cache_hits: int = 0
-    calls_saved: int = 0
-    time_saved: float = 0.0
-
-
-class _SearchContext:
-    """Per-(pair, EV-set) caches: query pairs, validity, verdicts, dead set.
-
-    When a cross-version ``VerdictCache`` is attached, the context also plans
-    *batched* window verification: cache-covered windows run first (they cost
-    no EV call, and a cached non-True verdict aborts the decomposition before
-    any EV fires) and in-pair isomorphic windows collapse onto a single
-    representative whose verdict the others adopt.
+class _SearchContext(BaseSearchContext):
+    """The bitmask-kernel search context: window handles are dense small-int
+    ids interned through a per-search ``WindowTable``, which pins every
+    derived fact (mask, canonical unit tuple, neighbor mask, connectivity,
+    query pair, fingerprint, EV validity) to the id so the search never
+    recomputes them.  All verdict/provenance/batched-dispatch machinery is
+    inherited from ``BaseSearchContext`` — it is handle-agnostic, which is
+    what keeps this backend and the reference backend bit-comparable.
     """
 
     def __init__(
@@ -656,205 +738,54 @@ class _SearchContext:
         stats: VeerStats,
         cache: Optional[VerdictCache] = None,
     ):
-        self.pair = pair
-        self.evs = evs
-        self.stats = stats
-        self.cache = cache
-        self._valid: Dict[FrozenSet[int], Tuple[int, ...]] = {}
-        self._verdict: Dict[FrozenSet[int], Optional[bool]] = {}
-        self.dead: Set[FrozenSet[int]] = set()
-        # evidence trail: which window was decided how ("identical" or the
-        # deciding EV's name), the windows of the accepted decomposition(s),
-        # and the refuting whole-pair window if the verdict is False
-        self.provenance: Dict[FrozenSet[int], Tuple[str, Optional[str]]] = {}
-        self.proof: List[FrozenSet[int]] = []
-        self.witness: Optional[FrozenSet[int]] = None
+        super().__init__(pair, evs, stats, cache)
+        self.table = WindowTable(pair)
 
-    def query_pair(self, win: FrozenSet[int]) -> Optional[QueryPair]:
-        return self.pair.to_query_pair(win)
+    def query_pair(self, wid: int) -> Optional[QueryPair]:
+        return self.table.query_pair(wid)
 
-    def batch_plan(
-        self, windows: Tuple[FrozenSet[int], ...]
-    ) -> Tuple[List[FrozenSet[int]], Dict[FrozenSet[int], List[FrozenSet[int]]]]:
-        """Partition a decomposition's windows into a verification order and
-        an adoption map (representative -> isomorphic windows it answers
-        for).  Without a verdict cache this degrades to the plain order."""
-        if self.cache is None or len(windows) == 1:
-            return list(windows), {}
-        for w in windows:
-            # a memoized non-True verdict dooms the decomposition: surface
-            # it alone, before spending fingerprint/validate work on peers
-            if w in self._verdict and self._verdict[w] is not TRUE:
-                return [w], {}
-        memoized: List[FrozenSet[int]] = []
-        covered: List[FrozenSet[int]] = []
-        fresh: List[FrozenSet[int]] = []
-        plain: List[FrozenSet[int]] = []
-        adopt: Dict[FrozenSet[int], List[FrozenSet[int]]] = {}
-        rep_by_fp: Dict[str, FrozenSet[int]] = {}
-        for w in windows:
-            if w in self._verdict:
-                memoized.append(w)
-                continue
-            fp = self.pair.window_fingerprint(w)
-            if fp is None:
-                plain.append(w)  # ill-formed: window_verdict resolves cheaply
-                continue
-            rep = rep_by_fp.get(fp)
-            if rep is not None:
-                adopt.setdefault(rep, []).append(w)
-                continue
-            rep_by_fp[fp] = w
-            names = [self.evs[i].name for i in self.valid_evs(w)]
-            if names and self.cache.covers(names, fp):
-                covered.append(w)
-            else:
-                fresh.append(w)
-        return memoized + covered + fresh + plain, adopt
+    def fingerprint(self, wid: int) -> Optional[str]:
+        return self.table.fingerprint(wid)
 
-    def adopt_verdict(
-        self,
-        win: FrozenSet[int],
-        v: Optional[bool],
-        rep: Optional[FrozenSet[int]] = None,
-    ) -> None:
-        """Record a verdict obtained from an isomorphic window — sound
-        because fingerprint equality implies the EVs would answer the same.
-        Provenance is inherited from the representative: the named EV's
-        verdict stands for this window too (same fingerprint)."""
-        if win in self._verdict:
-            return
-        self._verdict[win] = v
-        if rep is not None and rep in self.provenance:
-            self.provenance[win] = self.provenance[rep]
-        self.stats.windows_verified += 1
-        self.stats.windows_deduped += 1
-        self.stats.ev_calls_saved += 1
-
-    def valid_evs(self, win: FrozenSet[int]) -> Tuple[int, ...]:
-        if win in self._valid:
-            return self._valid[win]
-        qp = self.query_pair(win)
-        out: Tuple[int, ...] = ()
-        if qp is not None:
-            out = tuple(
-                i
-                for i, ev in enumerate(self.evs)
-                if qp.semantics in ev.semantics and ev.validate(qp)
-            )
-        self._valid[win] = out
+    def valid_evs(self, wid: int) -> Tuple[int, ...]:
+        out = self.table.valid[wid]
+        if out is None:
+            out = self._compute_valid(wid)
+            self.table.valid[wid] = out
         return out
 
-    def window_verdict(self, win: FrozenSet[int]) -> Optional[bool]:
-        """True if some valid EV proves equivalence; False if some valid
-        inequivalence-capable EV refutes; else Unknown. Identical sub-DAGs
-        shortcut to True (non-covering windows, Lemma 5.3 CASE1)."""
-        if win in self._verdict:
-            return self._verdict[win]
-        return self._commit_outcome(win, self._compute_outcome(win))
-
-    def _compute_outcome(self, win: FrozenSet[int]) -> _WindowOutcome:
-        """Check one window without mutating verdict/provenance/stats state.
-
-        Safe to run on a worker thread: the only shared structures it
-        touches are the ``_valid``/query-pair memo dicts (distinct windows
-        write distinct keys; a duplicated computation produces an identical
-        value) and the verdict cache / ``CachedEV`` counters, which carry
-        their own locks.
-        """
-        if self._identical(win):
-            return _WindowOutcome(TRUE, ("identical", None))
-        out = _WindowOutcome(UNKNOWN, None)
-        qp = self.query_pair(win)
+    def _compute_valid(self, wid: int) -> Tuple[int, ...]:
+        """EV validity with cross-version memoization: restriction checks
+        (notably Equitas' normalize-based ones) dominate cache-warm searches,
+        and ``validate`` is as deterministic and id-invariant as ``check`` —
+        so the kernel keys it by the window's canonical fingerprint in the
+        shared ``VerdictCache``.  Falls back to the plain computation when no
+        cache is attached.  (The reference backend keeps validating afresh:
+        it is the pre-kernel baseline.)"""
+        cache = self.cache
+        if cache is None:
+            return super()._compute_valid(wid)
+        qp = self.query_pair(wid)
         if qp is None:
-            return out
-        for i in self.valid_evs(win):
-            ev = self.evs[i]
-            if isinstance(ev, CachedEV):
-                r, hit, dt, saved = ev.check_recorded(qp)
-                if hit:
-                    # answered from the verdict cache: not an EV call
-                    out.cache_hits += 1
-                    out.calls_saved += 1
-                    out.time_saved += saved
-                else:
-                    out.ev_calls += 1
-                    out.ev_time += dt
-            else:
-                t0 = time.perf_counter()
-                r = ev.check(qp)
-                out.ev_calls += 1
-                out.ev_time += time.perf_counter() - t0
-            if r is True:
-                out.verdict = TRUE
-                out.provenance = ("ev", ev.name)
-                break
-            if r is False and ev.can_prove_inequivalence:
-                # a capable EV's refutation is a proof (Thm 5.8):
-                # stop — running more EVs wastes calls, and a buggy
-                # later True must not overwrite a sound False
-                out.verdict = FALSE
-                out.provenance = ("ev", ev.name)
-                break
-        return out
+            return ()
+        fp = self.fingerprint(wid)
+        out = []
+        for i, ev in enumerate(self.evs):
+            if qp.semantics not in ev.semantics:
+                continue
+            ok = cache.get_validity(ev.name, fp)
+            if ok is None:
+                ok = bool(ev.validate(qp))
+                cache.put_validity(ev.name, fp, ok)
+            if ok:
+                out.append(i)
+        return tuple(out)
 
-    def _commit_outcome(
-        self, win: FrozenSet[int], out: _WindowOutcome
-    ) -> Optional[bool]:
-        """Apply a computed outcome on the search thread (idempotent)."""
-        if win in self._verdict:
-            return self._verdict[win]
-        if out.provenance is not None:
-            self.provenance[win] = out.provenance
-        s = self.stats
-        s.ev_calls += out.ev_calls
-        s.ev_time += out.ev_time
-        s.cache_hits += out.cache_hits
-        s.ev_calls_saved += out.calls_saved
-        s.ev_time_saved += out.time_saved
-        s.windows_verified += 1
-        self._verdict[win] = out.verdict
-        return out.verdict
+    def units_tuple(self, wid: int) -> Tuple[int, ...]:
+        return self.table.key[wid]
 
-    def prefetch(
-        self, order: List[FrozenSet[int]], pool: ThreadPoolExecutor
-    ) -> None:
-        """Check a planned batch of windows concurrently; commit in order.
-
-        Every window of the batch is computed (no speculative cancellation —
-        the work set is fixed by the plan, never by thread timing) and the
-        outcomes are committed in the planned order, so memoized verdicts,
-        provenance and stats are reproducible run-to-run.  Windows the
-        sequential adoption loop then skips via its short-circuit were
-        *speculatively* checked; their verdicts stay memoized (and their EV
-        calls accounted), which is the latency-for-work trade parallel
-        dispatch makes.
-        """
-        targets = [w for w in order if w not in self._verdict]
-        if len(targets) < 2:
-            return  # nothing to overlap
-        futures = [(w, pool.submit(self._compute_outcome, w)) for w in targets]
-        for w, fut in futures:
-            self._commit_outcome(w, fut.result())
-
-    def _identical(self, win: FrozenSet[int]) -> bool:
-        """Both sub-DAGs structurally identical under the mapping."""
-        pair = self.pair
-        p_ops = pair.p_ops(win)
-        q_ops = pair.q_ops(win)
-        if len(p_ops) != len(win) or len(q_ops) != len(win):
-            return False  # contains an inserted/deleted op
-        return identical_under_mapping(
-            {p: pair.P.ops[p] for p in p_ops},
-            {q: pair.Q.ops[q] for q in q_ops},
-            [(l.src, l.dst, l.dst_port) for l in pair.P.links if l.dst in p_ops],
-            [(l.src, l.dst, l.dst_port) for l in pair.Q.links if l.dst in q_ops],
-            pair.mapping.forward,
-        )
-
-
-def _decomp_key(windows: Tuple[FrozenSet[int], ...]) -> Tuple:
-    return tuple(tuple(sorted(w)) for w in windows)
+    def win_frozenset(self, wid: int) -> FrozenSet[int]:
+        return self.table.frozen(wid)
 
 
 def _identity_payload(
@@ -885,25 +816,25 @@ def _identity_payload(
     }
 
 
-def _window_evidence(
-    ctx: "_SearchContext", win: FrozenSet[int]
-) -> WindowEvidence:
+def _window_evidence(ctx: BaseSearchContext, win) -> WindowEvidence:
+    """``win`` is a backend window handle (table id or frozenset); the
+    emitted evidence is representation-free and byte-identical either way."""
     kind, ev_name = ctx.provenance.get(win, ("identical", None))
     verdict = ctx._verdict.get(win)
     if kind == "identical":
         return WindowEvidence(
-            units=tuple(sorted(win)),
+            units=ctx.units_tuple(win),
             kind="identical",
             verdict=verdict,
-            identity_payload=_identity_payload(ctx.pair, win),
+            identity_payload=_identity_payload(ctx.pair, ctx.win_frozenset(win)),
         )
     return WindowEvidence(
-        units=tuple(sorted(win)),
+        units=ctx.units_tuple(win),
         kind="ev",
         verdict=verdict,
         ev_name=ev_name,
-        fingerprint=ctx.pair.window_fingerprint(win),
-        query_pair=ctx.pair.to_query_pair(win),
+        fingerprint=ctx.fingerprint(win),
+        query_pair=ctx.query_pair(win),
     )
 
 
@@ -936,7 +867,7 @@ def _assemble_evidence(
     elif coll.kind == "symbolic":
         ev.sink_pairs = coll.sink_pairs
     elif coll.kind == "decomposition" and coll.ctx is not None:
-        seen: Set[FrozenSet[int]] = set()
+        seen: Set[object] = set()
         for win in coll.ctx.proof:
             if win in seen:
                 continue

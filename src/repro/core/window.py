@@ -23,6 +23,26 @@ deleted operator forces the window to grow until the boundary is coherent).
 *Changes* group the raw edit operations into semantic units the way the
 paper counts them ("deleting the Filter operator" = one change including its
 incident link edits).
+
+Bitmask search kernel (docs/PERFORMANCE.md): alongside the frozenset API,
+``VersionPair`` carries an integer-bitmask view of the unit graph — window
+``w`` is an ``int`` with bit *i* set iff unit *i* ∈ w, ``adj_mask[i]`` is the
+precomputed neighbor bitmask of unit *i* (with per-side ``p_adj_mask`` /
+``q_adj_mask`` for the Def 3.1 sub-DAG connectivity check), so the search's
+inner-loop operations become single big-int instructions:
+
+  * ``neighbors``   → OR of per-unit adjacency masks, AND-NOT the window;
+  * ``connected``   → iterated mask-expansion fixpoint (no Python DFS);
+  * subsumption     → ``x & ~merged == 0``;
+  * change coverage → ``change_mask & ~window == 0``.
+
+``WindowTable`` interns masks to dense small-int ids and caches everything
+the verifier repeatedly asks about a window (sort key, popcount, neighbor
+mask, connectivity, query pair, fingerprint, valid-EV list, covered-change
+mask), so the decomposition search operates on small ints end to end.
+``FrozenSet`` survives only at the public API boundary (``to_query_pair``,
+``window_fingerprint``, certificate replay): the exported query pairs and
+evidence are byte-identical either way.
 """
 
 from __future__ import annotations
@@ -106,8 +126,34 @@ class VersionPair:
             adj[b].add(a)
         self.adj = adj
 
+        # bitmask view of the unit graph (the search kernel's representation)
+        n = len(units)
+        self.n_units = n
+        self.full_mask = (1 << n) - 1
+        p_adj = [0] * n
+        q_adj = [0] * n
+        for l in P.links:
+            a, b = self.by_p[l.src], self.by_p[l.dst]
+            p_adj[a] |= 1 << b
+            p_adj[b] |= 1 << a
+        for l in Q.links:
+            a, b = self.by_q[l.src], self.by_q[l.dst]
+            q_adj[a] |= 1 << b
+            q_adj[b] |= 1 << a
+        self.p_adj_mask = p_adj
+        self.q_adj_mask = q_adj
+        self.adj_mask = [p_adj[i] | q_adj[i] for i in range(n)]
+        self.p_mask = 0
+        self.q_mask = 0
+        for i, u in enumerate(units):
+            if u.p is not None:
+                self.p_mask |= 1 << i
+            if u.q is not None:
+                self.q_mask |= 1 << i
+
         self.edits = diff(P, Q, mapping)
         self.changes = self._group_changes()
+        self.change_masks = [self.mask_of(c.required_units) for c in self.changes]
         self.schemas_p = infer_schema(P, {})
         self.schemas_q = infer_schema(Q, {})
         self._qp_cache: Dict[FrozenSet[int], Optional[QueryPair]] = {}
@@ -311,6 +357,69 @@ class VersionPair:
             not q or self.Q.is_connected(q)
         )
 
+    # -- bitmask window helpers (see module docstring / docs/PERFORMANCE.md) --
+    @staticmethod
+    def mask_of(units) -> int:
+        m = 0
+        for u in units:
+            m |= 1 << u
+        return m
+
+    @staticmethod
+    def mask_units(mask: int) -> Tuple[int, ...]:
+        """Ascending unit indices of ``mask`` — doubles as the canonical
+        window sort key (lexicographic on sorted unit tuples, exactly the
+        ``key=sorted`` order of the frozenset representation)."""
+        out = []
+        while mask:
+            low = mask & -mask
+            out.append(low.bit_length() - 1)
+            mask ^= low
+        return tuple(out)
+
+    def mask_neighbors(self, mask: int) -> int:
+        """Units adjacent to the window but outside it, as a mask."""
+        adj = self.adj_mask
+        out = 0
+        m = mask
+        while m:
+            low = m & -m
+            out |= adj[low.bit_length() - 1]
+            m ^= low
+        return out & ~mask
+
+    @staticmethod
+    def _mask_spans(mask: int, adj: List[int]) -> bool:
+        """Fixpoint mask expansion from the lowest unit: does one connected
+        component cover ``mask`` under the per-unit adjacency ``adj``?"""
+        reached = frontier = mask & -mask
+        while frontier:
+            grow = 0
+            f = frontier
+            while f:
+                low = f & -f
+                grow |= adj[low.bit_length() - 1]
+                f ^= low
+            frontier = grow & mask & ~reached
+            reached |= frontier
+        return reached == mask
+
+    def mask_connected(self, mask: int) -> bool:
+        """``connected`` on the bitmask representation (Def 3.1): unit-graph
+        connectivity plus per-side sub-DAG connectivity, each an iterated
+        mask-expansion fixpoint over the precomputed adjacency bitsets."""
+        if not mask:
+            return True
+        if not self._mask_spans(mask, self.adj_mask):
+            return False
+        p = mask & self.p_mask
+        if p and not self._mask_spans(p, self.p_adj_mask):
+            return False
+        q = mask & self.q_mask
+        if q and not self._mask_spans(q, self.q_adj_mask):
+            return False
+        return True
+
     def covers(self, win: FrozenSet[int], change: Change) -> bool:
         return change.required_units <= win
 
@@ -347,14 +456,19 @@ class VersionPair:
         self._fp_cache[win] = fp
         return fp
 
-    def _build_query_pair(self, win: FrozenSet[int]) -> Optional[QueryPair]:
+    def _build_query_pair(
+        self, win: FrozenSet[int], *, assume_connected: bool = False
+    ) -> Optional[QueryPair]:
+        """``assume_connected=True`` skips the Def 3.1 connectivity recheck —
+        the ``WindowTable`` fast path has already established it via
+        ``mask_connected`` (provably the same predicate)."""
         fwd = self.mapping.forward
         bwd = self.mapping.backward
         p_in = self.p_ops(win)
         q_in = self.q_ops(win)
         if not p_in or not q_in:
             return None
-        if not self.connected(win):
+        if not assume_connected and not self.connected(win):
             return None
 
         # ---- in-boundary producers
@@ -395,10 +509,13 @@ class VersionPair:
             return None
 
         # ---- version sinks inside the window
+        # iterate in sorted order: the emitted QueryPair must not depend on
+        # set iteration order (backends build `win` differently, and string
+        # hashing varies per process) — certificates are byte-stable this way
         sink_pairs: List[Tuple[str, str]] = []
         at_version_sink = True
-        p_true_sinks = [op for op in p_in if not self.P.out_links[op]]
-        q_true_sinks = [op for op in q_in if not self.Q.out_links[op]]
+        p_true_sinks = [op for op in sorted(p_in) if not self.P.out_links[op]]
+        q_true_sinks = [op for op in sorted(q_in) if not self.Q.out_links[op]]
         matched_q = set()
         for sp in p_true_sinks:
             sq = fwd.get(sp)
@@ -441,10 +558,13 @@ class VersionPair:
     ) -> Optional[DataflowDAG]:
         fwd = self.mapping.forward
         bwd = self.mapping.backward
-        ops = [dag.ops[i] for i in inside]
+        # sorted: the induced sub-DAG's operator/link order (and so the
+        # serialized certificate payload) must not follow set iteration order
+        ordered = sorted(inside)
+        ops = [dag.ops[i] for i in ordered]
         links = [l for l in dag.links if l.src in inside and l.dst in inside]
         extra_ops: Dict[str, Operator] = {}
-        for op_id in inside:
+        for op_id in ordered:
             for l in dag.in_links[op_id]:
                 if l.src in inside:
                     continue
@@ -462,6 +582,132 @@ class VersionPair:
         except D.DAGError:
             return None
         return sub
+
+
+_UNSET = object()  # WindowTable lazy-slot sentinel (None is a valid value)
+
+
+class WindowTable:
+    """Interning table: one canonical dense id per window bitmask.
+
+    The decomposition search forms the same windows over and over — across
+    candidate decompositions, across heap generations, across segments.
+    Interning gives each distinct window one small-int id and pins every
+    derived fact to it, computed at most once:
+
+      * ``masks[id]`` / ``key[id]`` / ``pop[id]`` — the bitmask, the
+        ascending unit tuple (canonical sort key, also the certificate's
+        ``units``), and the popcount;
+      * ``neighbor_mask(id)`` — the frontier mask (lazy);
+      * ``connected(id)`` — Def 3.1 connectivity via mask fixpoint (lazy);
+      * ``query_pair(id)`` / ``fingerprint(id)`` — the exported Def 3.4
+        query pair and its canonical content address (lazy; ``None`` for
+        ill-formed windows);
+      * ``covered_mask(id)`` — bit *c* set iff change *c*'s required units
+        are inside the window (lazy);
+      * ``valid[id]`` — storage slot for the per-EV-roster validity tuple
+        (filled by the search context, which owns the EV roster).
+
+    One table serves one search (it is created per ``_SearchContext``); ids
+    are meaningless across tables.
+    """
+
+    __slots__ = (
+        "pair", "_ids", "masks", "key", "pop", "valid",
+        "_neighbors", "_connected", "_qp", "_fp", "_covered",
+    )
+
+    def __init__(self, pair: "VersionPair"):
+        self.pair = pair
+        self._ids: Dict[int, int] = {}
+        self.masks: List[int] = []
+        self.key: List[Tuple[int, ...]] = []
+        self.pop: List[int] = []
+        self.valid: List[Optional[Tuple[int, ...]]] = []
+        self._neighbors: List[Optional[int]] = []
+        self._connected: List[Optional[bool]] = []
+        self._qp: List[object] = []
+        self._fp: List[object] = []
+        self._covered: List[Optional[int]] = []
+
+    def __len__(self) -> int:
+        return len(self.masks)
+
+    def intern(self, mask: int) -> int:
+        wid = self._ids.get(mask)
+        if wid is None:
+            wid = len(self.masks)
+            self._ids[mask] = wid
+            self.masks.append(mask)
+            units = self.pair.mask_units(mask)
+            self.key.append(units)
+            self.pop.append(len(units))
+            self.valid.append(None)
+            self._neighbors.append(None)
+            self._connected.append(None)
+            self._qp.append(_UNSET)
+            self._fp.append(_UNSET)
+            self._covered.append(None)
+        return wid
+
+    def intern_units(self, units) -> int:
+        return self.intern(self.pair.mask_of(units))
+
+    def frozen(self, wid: int) -> FrozenSet[int]:
+        """The window back at the frozenset API boundary (evidence,
+        certificates, ``to_query_pair``)."""
+        return frozenset(self.key[wid])
+
+    def neighbor_mask(self, wid: int) -> int:
+        m = self._neighbors[wid]
+        if m is None:
+            m = self.pair.mask_neighbors(self.masks[wid])
+            self._neighbors[wid] = m
+        return m
+
+    def connected(self, wid: int) -> bool:
+        c = self._connected[wid]
+        if c is None:
+            c = self.pair.mask_connected(self.masks[wid])
+            self._connected[wid] = c
+        return c
+
+    def query_pair(self, wid: int) -> Optional[QueryPair]:
+        qp = self._qp[wid]
+        if qp is _UNSET:
+            if not self.connected(wid):
+                qp = None
+            else:
+                qp = self.pair._build_query_pair(
+                    self.frozen(wid), assume_connected=True
+                )
+            self._qp[wid] = qp
+        return qp
+
+    def fingerprint(self, wid: int) -> Optional[str]:
+        fp = self._fp[wid]
+        if fp is _UNSET:
+            qp = self.query_pair(wid)
+            fp = None if qp is None else qp.fingerprint()
+            self._fp[wid] = fp
+        return fp
+
+    def covered_mask(self, wid: int) -> int:
+        """Bitmask over *change indices* covered by this window.
+
+        The search itself never asks (initial windows cover their anchoring
+        change by construction and merges only grow windows); this is the
+        coverage-query surface for tooling on top of the table —
+        certificate-style coverage audits, benchmarks, tests."""
+        cm = self._covered[wid]
+        if cm is None:
+            cm = 0
+            mask = self.masks[wid]
+            for ci, ch_mask in enumerate(self.pair.change_masks):
+                if not ch_mask & ~mask:
+                    cm |= 1 << ci
+            self._covered[wid] = cm
+        return cm
 
 
 def identical_under_mapping(

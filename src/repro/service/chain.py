@@ -209,7 +209,14 @@ class VersionChainSession:
             path = cache_path if cache_path is not None else (
                 config.cache_path if config is not None else None
             )
-            cache = VerdictCache(path)
+            # honor the config's LRU bound so long-lived sessions do not
+            # accumulate verdict/validity entries without limit
+            cache = VerdictCache(
+                path,
+                max_entries=(
+                    config.cache_max_entries if config is not None else None
+                ),
+            )
         self.cache = cache
         self.config = config
         if config is not None:

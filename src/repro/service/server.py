@@ -213,7 +213,12 @@ class VerificationService:
         self.config = config if config is not None else VeerConfig()
         self.registry = registry
         self.cache = (
-            cache if cache is not None else VerdictCache(self.config.cache_path)
+            cache
+            if cache is not None
+            else VerdictCache(
+                self.config.cache_path,
+                max_entries=self.config.cache_max_entries,
+            )
         )
         self.pair_cache = PairVerdictCache() if share_pair_verdicts else None
         self.keep_certificates = keep_certificates

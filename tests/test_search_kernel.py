@@ -1,0 +1,239 @@
+"""Bitmask search kernel vs retained set-based reference — deterministic.
+
+Seeded (hypothesis-free) twin of ``tests/test_search_kernel_property.py``:
+runs in every environment and enforces the same contract — the kernel
+(``search_backend="bitmask"``) is a pure representation change, producing
+identical verdicts, exploration counts, suppressed pushes and byte-identical
+certificate JSON vs the retained frozenset backend — plus the frontier bound
+(``VeerStats.pushes_skipped``) and mask-helper/Window-table invariants.
+"""
+
+import heapq
+import random
+
+import pytest
+
+from helpers import SCHEMA, chain, f, proj_identity
+from repro.api.certificate import certificate_from_evidence
+from repro.core import dag as D
+from repro.core.dag import Link, Operator
+from repro.core.edits import identity_mapping
+from repro.core.ev import EquitasEV, JaxprEV, SpesEV, UDPEV
+from repro.core.ev.cache import VerdictCache
+from repro.core.predicates import LinCmp, LinExpr, Pred
+from repro.core.verifier import Veer, make_veer_plus
+from repro.core.window import VersionPair, WindowTable
+
+EVS = [SpesEV(), EquitasEV(), UDPEV(), JaxprEV()]
+
+
+# ---------------------------------------------------------------------------
+# seeded generators (mirroring the hypothesis strategies)
+# ---------------------------------------------------------------------------
+
+
+def _workflow(rng: random.Random):
+    ops = []
+    for i in range(rng.randint(1, 4)):
+        kind = rng.choice(["filter", "filter", "project", "agg"])
+        if kind == "filter":
+            col = rng.choice(list(SCHEMA))
+            cmp_ = rng.choice(["<", "<=", ">", ">=", "=="])
+            ops.append(f(f"op{i}", col, cmp_, rng.randint(0, 6)))
+        elif kind == "project":
+            ops.append(proj_identity(f"op{i}"))
+        else:
+            gb = rng.choice(list(SCHEMA))
+            ops.append(Operator.make(
+                f"op{i}", D.AGGREGATE, group_by=(gb,),
+                aggs=(("sum", rng.choice(list(SCHEMA)), "agg_out"),),
+            ))
+            break
+    return chain(*ops)
+
+
+def _rewritten(P, rng: random.Random):
+    choice = rng.choice(["empty_filter", "scale", "bump", "new_filter"])
+    fs = [o for o in P.ops.values() if o.op_type == D.FILTER]
+    if choice in ("scale", "bump"):
+        for op in fs:
+            p = op.get("pred")
+            if p.kind == "atom" and isinstance(p.atom, LinCmp):
+                if choice == "scale":
+                    changed = LinCmp(p.atom.expr.scale(2), p.atom.op)
+                else:
+                    changed = LinCmp(p.atom.expr + LinExpr.lit(1), p.atom.op)
+                return P.replace_op(op.with_props(pred=Pred.of(changed)))
+        choice = "empty_filter"
+    l = rng.choice(list(P.links))
+    if choice == "new_filter":
+        pred = Pred.cmp(rng.choice(list(SCHEMA)), "<", rng.randint(1, 5))
+    else:
+        pred = Pred.true()
+    new = Operator.make("fx_new", D.FILTER, pred=pred)
+    Q = P.add_op(new).remove_link(l)
+    return Q.add_link(Link(l.src, new.id)).add_link(Link(new.id, l.dst, 0))
+
+
+def _splice_true_filters(P, n):
+    """n separate empty-filter insertions => n changes (multi-change pairs)."""
+    Q = P
+    links = [l for l in P.links]
+    for i, l in enumerate(links[:n]):
+        new = Operator.make(f"tf{i}", D.FILTER, pred=Pred.true())
+        Q = Q.add_op(new).remove_link(Link(l.src, l.dst, l.dst_port))
+        Q = Q.add_link(Link(l.src, new.id)).add_link(Link(new.id, l.dst, l.dst_port))
+    return Q
+
+
+def _outcome(P, Q, backend, flags, plus, cached):
+    cache = VerdictCache() if cached else None
+    make = make_veer_plus if plus else Veer
+    veer = make(EVS, search_backend=backend, verdict_cache=cache, **flags)
+    verdict, stats, evidence = veer.verify_with_evidence(P, Q)
+    cert = certificate_from_evidence(evidence)
+    return {
+        "verdict": verdict,
+        "decompositions": stats.decompositions_explored,
+        "pushes_skipped": stats.pushes_skipped,
+        "budget_exhausted": stats.budget_exhausted,
+        "windows_verified": stats.windows_verified,
+        "ev_calls": stats.ev_calls,
+        "cache_hits": stats.cache_hits,
+        "cert": cert.to_json() if cert is not None else None,
+    }
+
+
+_CONFIGS = (
+    {},                                                  # paper baseline
+    {"pruning": True, "ranking": True, "eager_verify": True},
+    {"max_decompositions": 25},                          # tight budget
+)
+
+
+# ---------------------------------------------------------------------------
+# backend equivalence (seeded sweep)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_backends_identical_seeded(seed):
+    rng = random.Random(seed)
+    P = _workflow(rng)
+    Q = _rewritten(P, rng)
+    Q.validate()
+    flags = _CONFIGS[seed % len(_CONFIGS)]
+    plus = bool(seed % 2)
+    cached = bool(seed % 3)
+    ref = _outcome(P, Q, "reference", flags, plus, cached)
+    bit = _outcome(P, Q, "bitmask", flags, plus, cached)
+    assert bit == ref, f"backend divergence on {list(Q.ops)} flags={flags}"
+
+
+@pytest.mark.parametrize("seed,budget", [(0, 20), (1, 200), (2, 60), (3, 20)])
+def test_backends_identical_multi_change(seed, budget):
+    rng = random.Random(100 + seed)
+    P = _workflow(rng)
+    Q = _splice_true_filters(P, rng.randint(2, 4))
+    Q.validate()
+    ref = _outcome(P, Q, "reference", {"max_decompositions": budget}, False, False)
+    bit = _outcome(P, Q, "bitmask", {"max_decompositions": budget}, False, False)
+    assert bit == ref
+
+
+# ---------------------------------------------------------------------------
+# mask helpers == set helpers / WindowTable invariants
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_mask_helpers_match_set_helpers(seed):
+    rng = random.Random(200 + seed)
+    P = _workflow(rng)
+    Q = _rewritten(P, rng)
+    Q.validate()
+    pair = VersionPair(P, Q, identity_mapping(P, Q))
+    n = pair.n_units
+    for _ in range(24):
+        units = frozenset(
+            u for u in range(n) if rng.random() < rng.choice((0.2, 0.5, 0.9))
+        )
+        mask = pair.mask_of(units)
+        assert pair.mask_units(mask) == tuple(sorted(units))
+        assert pair.mask_connected(mask) == pair.connected(units)
+        assert pair.mask_units(pair.mask_neighbors(mask)) == tuple(
+            sorted(pair.neighbors(units))
+        )
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_window_table_interning_and_coverage(seed):
+    rng = random.Random(300 + seed)
+    P = _workflow(rng)
+    Q = _rewritten(P, rng)
+    Q.validate()
+    pair = VersionPair(P, Q, identity_mapping(P, Q))
+    table = WindowTable(pair)
+    n = pair.n_units
+    for _ in range(12):
+        units = frozenset(u for u in range(n) if rng.random() < 0.6) or frozenset([0])
+        wid = table.intern_units(units)
+        assert table.intern(pair.mask_of(units)) == wid  # canonical id per mask
+        assert table.frozen(wid) == units
+        assert table.pop[wid] == len(units)
+        covered = {
+            i for i in range(len(pair.changes))
+            if table.covered_mask(wid) >> i & 1
+        }
+        expected = {i for i, c in enumerate(pair.changes) if pair.covers(units, c)}
+        assert covered == expected
+        qp_api = pair.to_query_pair(units)
+        qp_tab = table.query_pair(wid)
+        assert (qp_tab is None) == (qp_api is None)
+        if qp_api is not None:
+            assert qp_tab.fingerprint() == qp_api.fingerprint()
+            assert table.fingerprint(wid) == pair.window_fingerprint(units)
+
+
+# ---------------------------------------------------------------------------
+# bounded frontier (satellite: no unbounded heap growth)
+# ---------------------------------------------------------------------------
+
+
+class _HeapRecorder:
+    """heapq stand-in that records the largest frontier ever held."""
+
+    def __init__(self):
+        self.max_len = 0
+
+    def heappush(self, heap, item):
+        heapq.heappush(heap, item)
+        self.max_len = max(self.max_len, len(heap))
+
+    def heappop(self, heap):
+        return heapq.heappop(heap)
+
+
+@pytest.mark.parametrize("backend", ["bitmask", "reference"])
+def test_frontier_never_exceeds_budget(backend, monkeypatch):
+    import repro.core.search_ref as search_ref_mod
+    import repro.core.verifier as verifier_mod
+
+    P = chain(*[f(f"op{i}", "a", ">", i) for i in range(6)])
+    Q = _splice_true_filters(P, 5)  # 5 changes: frontier would balloon
+    budget = 12
+    rec = _HeapRecorder()
+    monkeypatch.setattr(verifier_mod, "heapq", rec)
+    monkeypatch.setattr(search_ref_mod, "heapq", rec)
+    veer = Veer(EVS, search_backend=backend, max_decompositions=budget)
+    verdict, stats = veer.verify(P, Q)
+    assert rec.max_len <= budget, "frontier grew past the decomposition budget"
+    assert stats.decompositions_explored <= budget
+    assert stats.pushes_skipped > 0, "expected suppressed pushes on this pair"
+    assert stats.budget_exhausted
+    assert "pushes_skipped" in stats.as_dict()
+
+
+def test_invalid_search_backend_rejected():
+    with pytest.raises(ValueError, match="search_backend"):
+        Veer(EVS, search_backend="quantum")

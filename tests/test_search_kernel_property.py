@@ -1,0 +1,228 @@
+"""Bitmask search kernel vs retained set-based reference — property tests.
+
+The kernel (``search_backend="bitmask"``) must be a *pure representation
+change*: on any version pair it has to produce the same verdict, explore the
+same number of decompositions, skip the same frontier pushes, and emit
+byte-identical certificate JSON as the retained frozenset implementation
+(``search_backend="reference"``).  Property-tested on randomized workflows
+and rewrites; the mask-level helpers are additionally checked against their
+set-based counterparts on random unit subsets.
+
+Requires hypothesis (requirements-dev.txt); the deterministic seeded twin of
+these checks lives in ``tests/test_search_kernel.py`` and runs everywhere.
+"""
+
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from helpers import SCHEMA, chain, proj_identity
+from repro.api.certificate import certificate_from_evidence
+from repro.core import dag as D
+from repro.core.dag import Link, Operator
+from repro.core.edits import identity_mapping
+from repro.core.ev import EquitasEV, JaxprEV, SpesEV, UDPEV
+from repro.core.ev.cache import VerdictCache
+from repro.core.predicates import LinCmp, LinExpr, Pred
+from repro.core.verifier import Veer, make_veer_plus
+from repro.core.window import VersionPair, WindowTable
+
+EVS = [SpesEV(), EquitasEV(), UDPEV(), JaxprEV()]
+
+_COLS = list(SCHEMA)
+
+
+# ---------------------------------------------------------------------------
+# generators (built on tests/helpers.py's chain/operator builders)
+# ---------------------------------------------------------------------------
+
+
+@st.composite
+def _pred(draw):
+    col = draw(st.sampled_from(_COLS))
+    op = draw(st.sampled_from(["<", "<=", ">", ">=", "=="]))
+    val = draw(st.integers(0, 6))
+    p = Pred.cmp(col, op, val)
+    if draw(st.booleans()):
+        col2 = draw(st.sampled_from(_COLS))
+        p = Pred.and_(
+            p, Pred.cmp(col2, draw(st.sampled_from(["<", ">"])), draw(st.integers(0, 6)))
+        )
+    return p
+
+
+@st.composite
+def workflow(draw):
+    n_ops = draw(st.integers(1, 4))
+    ops = []
+    for i in range(n_ops):
+        kind = draw(st.sampled_from(["filter", "filter", "project", "agg"]))
+        if kind == "filter":
+            ops.append(Operator.make(f"op{i}", D.FILTER, pred=draw(_pred())))
+        elif kind == "project":
+            ops.append(proj_identity(f"op{i}"))
+        else:
+            gb = draw(st.sampled_from(_COLS))
+            ops.append(
+                Operator.make(
+                    f"op{i}", D.AGGREGATE, group_by=(gb,),
+                    aggs=(("sum", draw(st.sampled_from(_COLS)), "agg_out"),),
+                )
+            )
+            return chain(*ops)
+    return chain(*ops)
+
+
+@st.composite
+def rewritten(draw, P):
+    """One rewrite — equivalence-preserving or breaking, the search doesn't
+    care: what matters is that both backends walk it identically."""
+    choice = draw(st.sampled_from(["empty_filter", "scale", "bump", "new_filter"]))
+    fs = [o for o in P.ops.values() if o.op_type == D.FILTER]
+    if choice in ("scale", "bump"):
+        for op in fs:
+            p = op.get("pred")
+            if p.kind == "atom" and isinstance(p.atom, LinCmp):
+                if choice == "scale":
+                    changed = LinCmp(p.atom.expr.scale(2), p.atom.op)
+                else:
+                    changed = LinCmp(p.atom.expr + LinExpr.lit(1), p.atom.op)
+                return P.replace_op(op.with_props(pred=Pred.of(changed)))
+        choice = "empty_filter"
+    l = draw(st.sampled_from(list(P.links)))
+    if choice == "new_filter":
+        pred = Pred.cmp(draw(st.sampled_from(_COLS)), "<", draw(st.integers(1, 5)))
+    else:
+        pred = Pred.true()
+    new = Operator.make("fx_new", D.FILTER, pred=pred)
+    Q = P.add_op(new).remove_link(l)
+    return Q.add_link(Link(l.src, new.id)).add_link(Link(new.id, l.dst, 0))
+
+
+def _splice_true_filters(P, n):
+    """n separate empty-filter insertions => n changes (multi-change pairs)."""
+    Q = P
+    links = [l for l in P.links]
+    for i, l in enumerate(links[:n]):
+        new = Operator.make(f"tf{i}", D.FILTER, pred=Pred.true())
+        Q = Q.add_op(new).remove_link(Link(l.src, l.dst, l.dst_port))
+        Q = Q.add_link(Link(l.src, new.id)).add_link(Link(new.id, l.dst, l.dst_port))
+    return Q
+
+
+_CONFIGS = (
+    {},                                                  # paper baseline
+    {"pruning": True, "ranking": True, "eager_verify": True},
+    {"max_decompositions": 25},                          # tight budget
+)
+
+
+def _outcome(P, Q, backend, flags, plus, cached):
+    cache = VerdictCache() if cached else None
+    if plus:
+        veer = make_veer_plus(
+            EVS, search_backend=backend, verdict_cache=cache, **flags
+        )
+    else:
+        veer = Veer(EVS, search_backend=backend, verdict_cache=cache, **flags)
+    verdict, stats, evidence = veer.verify_with_evidence(P, Q)
+    cert = certificate_from_evidence(evidence)
+    return {
+        "verdict": verdict,
+        "decompositions": stats.decompositions_explored,
+        "pushes_skipped": stats.pushes_skipped,
+        "budget_exhausted": stats.budget_exhausted,
+        "windows_verified": stats.windows_verified,
+        "ev_calls": stats.ev_calls,
+        "cache_hits": stats.cache_hits,
+        "cert": cert.to_json() if cert is not None else None,
+    }
+
+
+# ---------------------------------------------------------------------------
+# the equivalence property
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.data())
+def test_bitmask_and_reference_backends_identical(data):
+    P = data.draw(workflow())
+    Q = data.draw(rewritten(P))
+    Q.validate()
+    flags = data.draw(st.sampled_from(_CONFIGS))
+    plus = data.draw(st.booleans())
+    cached = data.draw(st.booleans())
+    ref = _outcome(P, Q, "reference", flags, plus, cached)
+    bit = _outcome(P, Q, "bitmask", flags, plus, cached)
+    assert bit == ref, f"backend divergence on {list(Q.ops)} flags={flags} plus={plus}"
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.data())
+def test_backends_identical_on_multi_change_pairs(data):
+    P = data.draw(workflow())
+    Q = _splice_true_filters(P, data.draw(st.integers(2, 4)))
+    Q.validate()
+    budget = data.draw(st.sampled_from([20, 200]))
+    ref = _outcome(P, Q, "reference", {"max_decompositions": budget}, False, False)
+    bit = _outcome(P, Q, "bitmask", {"max_decompositions": budget}, False, False)
+    assert bit == ref
+
+
+# ---------------------------------------------------------------------------
+# mask helpers == set helpers
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.data())
+def test_mask_helpers_match_set_helpers(data):
+    P = data.draw(workflow())
+    Q = data.draw(rewritten(P))
+    Q.validate()
+    pair = VersionPair(P, Q, identity_mapping(P, Q))
+    n = pair.n_units
+    units = frozenset(data.draw(
+        st.sets(st.integers(0, n - 1), min_size=0, max_size=n)
+    ))
+    mask = pair.mask_of(units)
+    assert pair.mask_units(mask) == tuple(sorted(units))
+    assert pair.mask_connected(mask) == pair.connected(units)
+    assert pair.mask_units(pair.mask_neighbors(mask)) == tuple(
+        sorted(pair.neighbors(units))
+    )
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.data())
+def test_window_table_interning_and_coverage(data):
+    P = data.draw(workflow())
+    Q = data.draw(rewritten(P))
+    Q.validate()
+    pair = VersionPair(P, Q, identity_mapping(P, Q))
+    table = WindowTable(pair)
+    n = pair.n_units
+    units = frozenset(data.draw(
+        st.sets(st.integers(0, n - 1), min_size=1, max_size=n)
+    ))
+    wid = table.intern_units(units)
+    assert table.intern(pair.mask_of(units)) == wid  # canonical id per mask
+    assert table.frozen(wid) == units
+    assert table.pop[wid] == len(units)
+    # covered-change mask == the set-based covered_changes
+    covered = {
+        i for i in range(len(pair.changes)) if table.covered_mask(wid) >> i & 1
+    }
+    expected = {
+        i for i, c in enumerate(pair.changes) if pair.covers(units, c)
+    }
+    assert covered == expected
+    # query pair / fingerprint agree with the frozenset API
+    qp_api = pair.to_query_pair(units)
+    qp_tab = table.query_pair(wid)
+    assert (qp_tab is None) == (qp_api is None)
+    if qp_api is not None:
+        assert qp_tab.fingerprint() == qp_api.fingerprint()
+        assert table.fingerprint(wid) == pair.window_fingerprint(units)

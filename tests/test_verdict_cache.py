@@ -280,3 +280,100 @@ def test_cache_never_changes_verdicts():
                 [EquitasEV(), SpesEV(), UDPEV()], verdict_cache=cache
             ).verify(P_, Q_)
             assert got == expected
+
+
+# ---------------------------------------------------------------------------
+# LRU bound (max_entries) + validity memoization
+# ---------------------------------------------------------------------------
+
+
+def test_max_entries_evicts_lru():
+    cache = VerdictCache(max_entries=3)
+    for i in range(3):
+        cache.put("ev", f"fp{i}", True, 0.1)
+    assert len(cache) == 3 and cache.evictions == 0
+    cache.get("ev", "fp0")                 # refresh fp0: fp1 is now stalest
+    cache.put("ev", "fp3", True, 0.1)      # evicts fp1
+    assert cache.evictions == 1
+    assert ("ev", "fp1") not in cache
+    assert ("ev", "fp0") in cache and ("ev", "fp3") in cache
+    assert len(cache) == 3
+    stats = cache.stats()
+    assert stats["evictions"] == 1 and stats["max_entries"] == 3
+
+
+def test_max_entries_bounds_long_sessions():
+    cache = VerdictCache(max_entries=10)
+    for i in range(500):
+        cache.put("ev", f"fp{i}", i % 2 == 0, 0.01)
+        cache.put_validity("ev", f"fp{i}", True)
+    assert len(cache) == 10
+    assert cache.stats()["validity_entries"] == 10
+    assert cache.evictions == 2 * 490
+
+
+def test_max_entries_validation():
+    with pytest.raises(ValueError, match="max_entries"):
+        VerdictCache(max_entries=0)
+
+
+def test_eviction_drops_covers():
+    cache = VerdictCache(max_entries=2)
+    cache.put("a", "fp", True, 0.1)
+    cache.put("b", "fp", True, 0.1)
+    assert cache.covers(["a", "b"], "fp")
+    cache.put("c", "fp", True, 0.1)        # evicts ("a", "fp")
+    assert not cache.covers(["a", "b"], "fp")
+
+
+def test_validity_round_trip(tmp_path):
+    path = tmp_path / "verdicts.json"
+    cache = VerdictCache(str(path), max_entries=100)
+    cache.put_validity("equitas", "fp1", True)
+    cache.put_validity("equitas", "fp2", False)
+    assert cache.get_validity("equitas", "fp1") is True
+    assert cache.get_validity("equitas", "fp2") is False
+    assert cache.get_validity("equitas", "fp3") is None
+    cache.save()
+    warm = VerdictCache(str(path))
+    assert warm.get_validity("equitas", "fp1") is True
+    assert warm.get_validity("equitas", "fp2") is False
+    s = warm.stats()
+    assert s["validity_entries"] == 2
+    assert s["validity_hits"] == 2
+
+
+def test_validity_cache_skips_validate_calls():
+    """Warm runs must not re-run EV restriction checks (bitmask kernel)."""
+
+    class CountingEV(SpesEV):
+        calls = 0
+
+        def validate(self, qp):
+            type(self).calls += 1
+            return super().validate(qp)
+
+    P, Q = _two_filter_pair("v")
+    cache = VerdictCache()
+    for expect_fresh in (True, False):
+        ev = CountingEV()
+        veer = Veer([ev], verdict_cache=cache, search_backend="bitmask")
+        verdict, _ = veer.verify(P, Q)
+        assert verdict is True
+        if expect_fresh:
+            cold_calls = CountingEV.calls
+            assert cold_calls > 0
+    assert CountingEV.calls == cold_calls, "warm run re-ran validate"
+
+
+def test_bounded_cache_verify_still_correct():
+    """A tiny LRU bound degrades hit rate, never verdicts."""
+    P, Q = _two_filter_pair("w")
+    unbounded, _ = make_veer_plus(
+        [SpesEV(), EquitasEV(), UDPEV()], verdict_cache=VerdictCache()
+    ).verify(P, Q)
+    bounded, _ = make_veer_plus(
+        [SpesEV(), EquitasEV(), UDPEV()],
+        verdict_cache=VerdictCache(max_entries=2),
+    ).verify(P, Q)
+    assert bounded is unbounded is True
