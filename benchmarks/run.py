@@ -31,6 +31,7 @@ def main() -> None:
     args = ap.parse_args()
     from benchmarks import (
         chain_bench,
+        exec_bench,
         figs_scaling,
         roofline_bench,
         search_bench,
@@ -114,6 +115,15 @@ def main() -> None:
         f"speedup={r['speedup']:.1f}x pairs_per_sec={r['svc_pairs_per_sec']:.0f} "
         f"ev_calls_saved={r['ev_calls_saved_pct']:.0f}% "
         f"replay_ok={r['replay_ok_pct']:.0f}%",
+    ))
+
+    print("\n== Execute-with-reuse: chain time vs full re-execution ==")
+    t0 = time.perf_counter()
+    _, h = exec_bench.run(rows=exec_bench.SMOKE_ROWS, disk=False)
+    csv_lines.append(_csv(
+        "exec_bench", time.perf_counter() - t0,
+        f"speedup={h['speedup']:.1f}x exec_fraction={h['exec_fraction'] * 100:.0f}% "
+        f"tables_served={h['tables_served']}",
     ))
 
     print("\n== Search kernel: bitmask vs reference decompositions/sec ==")

@@ -28,6 +28,12 @@ from repro.api.certificate import (
 )
 from repro.api.config import ConfigError, VeerConfig
 from repro.api.facade import VerificationResult, verify
+from repro.core.frontier import (
+    FrontierEntry,
+    FrontierError,
+    ReuseFrontier,
+    compute_reuse_frontier,
+)
 from repro.api.registry import (
     DEFAULT_EV_NAMES,
     EVRegistry,
@@ -42,12 +48,16 @@ __all__ = [
     "DEFAULT_EV_NAMES",
     "EVRegistry",
     "EVSpec",
+    "FrontierEntry",
+    "FrontierError",
     "ReplayFailure",
+    "ReuseFrontier",
     "ReplayReport",
     "VeerConfig",
     "VerificationResult",
     "WindowRecord",
     "certificate_from_evidence",
+    "compute_reuse_frontier",
     "default_registry",
     "pair_digest",
     "tampered",

@@ -16,10 +16,13 @@ from repro.core import dag as D
 from repro.core.dag import DataflowDAG, infer_schema
 
 
-def sink_summary(
-    dag: DataflowDAG, sink_id: str
-) -> Optional[Tuple[Tuple[str, ...], Tuple[Tuple[str, bool], ...]]]:
-    """(projected columns S, sort keys O) at a sink, or None if underivable."""
+def sink_summaries(
+    dag: DataflowDAG,
+) -> Optional[Dict[str, Tuple[Tuple[str, ...], Tuple[Tuple[str, bool], ...]]]]:
+    """``{op_id: (projected columns S, sort keys O)}`` for every operator,
+    from ONE schema inference + one order-propagation pass — the service
+    hot path calls this per version, not per sink (a whole-DAG
+    ``infer_schema`` per sink pair dominated warm-cache verification)."""
     try:
         schemas = infer_schema(dag, {})
     except D.DAGError:
@@ -51,7 +54,15 @@ def sink_summary(
             order[op_id] = tuple(kept)
         else:
             order[op_id] = ()  # joins/aggregates/unions/UDFs scramble order
-    return tuple(schemas[sink_id]), order[sink_id]
+    return {i: (tuple(schemas[i]), order[i]) for i in dag.ops}
+
+
+def sink_summary(
+    dag: DataflowDAG, sink_id: str
+) -> Optional[Tuple[Tuple[str, ...], Tuple[Tuple[str, bool], ...]]]:
+    """(projected columns S, sort keys O) at a sink, or None if underivable."""
+    summaries = sink_summaries(dag)
+    return None if summaries is None else summaries[sink_id]
 
 
 def quick_inequivalent(
@@ -61,9 +72,13 @@ def quick_inequivalent(
     semantics: str,
 ) -> bool:
     """True ⇒ provably inequivalent. Conservative (False ≠ equivalent)."""
+    if not sink_pairs:
+        return False
+    sum_p = sink_summaries(P)
+    sum_q = sink_summaries(Q)
     for sp, sq in sink_pairs:
-        a = sink_summary(P, sp)
-        b = sink_summary(Q, sq)
+        a = sum_p[sp] if sum_p is not None else None
+        b = sum_q[sq] if sum_q is not None else None
         if a is None or b is None:
             continue
         if a[0] != b[0]:

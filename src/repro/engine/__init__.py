@@ -1,12 +1,32 @@
-from repro.engine.table import Table, tables_equal
-from repro.engine.executor import execute, sink_results_equal
+from repro.engine.table import Table, tables_equal, tables_identical
+from repro.engine.executor import (
+    ExecResult,
+    ExecStats,
+    ExecutionPlan,
+    execute,
+    sink_results_equal,
+)
+from repro.engine.store import (
+    DiskMaterializationStore,
+    InMemoryMaterializationStore,
+    MaterializationStore,
+    table_digest,
+)
 from repro.engine.ops_impl import register_udf, register_nonlinear, UDF_REGISTRY
 
 __all__ = [
     "Table",
     "tables_equal",
+    "tables_identical",
+    "ExecResult",
+    "ExecStats",
+    "ExecutionPlan",
     "execute",
     "sink_results_equal",
+    "DiskMaterializationStore",
+    "InMemoryMaterializationStore",
+    "MaterializationStore",
+    "table_digest",
     "register_udf",
     "register_nonlinear",
     "UDF_REGISTRY",

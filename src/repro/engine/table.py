@@ -119,6 +119,27 @@ def _canonical_rows(t: Table) -> List[Tuple]:
     return t.rows()
 
 
+def tables_identical(a: Table, b: Table) -> bool:
+    """Bit-level identity: same column order, same dtypes, same values
+    (NaN == NaN, so outer-join pads compare).  Stricter than any Def 2.2
+    semantics — the contract reuse-aware partial execution upholds versus a
+    full re-execution (see ``repro.engine.executor``)."""
+    if a.order != b.order or a.n != b.n:
+        return False
+    for c in a.order:
+        xa, xb = a.cols[c], b.cols[c]
+        if xa.dtype != xb.dtype:
+            # np.array_equal compares across numeric dtypes (int64 [1,2,3]
+            # == float64 [1.,2.,3.]); bit-level identity must not
+            return False
+        if xa.dtype == object:
+            if any(repr(_scalar(u)) != repr(_scalar(v)) for u, v in zip(xa, xb)):
+                return False
+        elif not np.array_equal(xa, xb, equal_nan=True):
+            return False
+    return True
+
+
 def tables_equal(a: Table, b: Table, semantics: str) -> bool:
     """Def 2.2 result equality under the given table semantics."""
     if a.order != b.order:

@@ -1,38 +1,61 @@
 """Veer-driven materialization reuse (paper Use cases 1 & 2).
 
-``ReuseManager.submit(dag, sources)`` — before executing a new pipeline
-version, try to *verify* each of its sinks equivalent to an
-already-executed version's sink via Veer; verified sinks are served from
-the content-addressed store instead of recomputed.  The store is shared
-with checkpointing (same hashing scheme), so equivalent results are stored
-once (Use case 2: no periodic de-duplication pass needed).
+``ReuseManager.submit(dag, sources)`` — execute (or reuse) a new pipeline
+version, rebased on the **operator-level** content-addressed store
+(``repro.engine.store``).  Three reuse paths, strongest first:
 
-Built on the ``repro.api`` surface: construct with ``config=VeerConfig``
-(EVs by name), and every reuse decision is recorded with its replayable
-``Certificate`` in ``self.certificates`` — serving a cached result is the
-verdict that most needs an audit trail.
+  1. **digest identity** — any operator (sink *or interior*) whose Merkle
+     content digest (upstream cone × concrete source bytes, see
+     ``ExecutionPlan.digests``) is already materialized is served from the
+     store, bit-identically, with no verification at all.  One changed
+     filter late in a 40-operator pipeline re-executes its cone only.
+  2. **certificate-backed semantic serving** — sinks the digests cannot
+     serve are verified against previously-executed versions via Veer;
+     a True verdict whose ``Certificate`` *replays green bound to the
+     pair* yields a reuse frontier (``repro.core.frontier``) from which
+     the sinks are served under the declared table semantics (Def 2.2),
+     guarded by source-digest equality so a rebound source can never
+     alias stale results.
+  3. **partial execution** — whatever remains runs through
+     ``ExecutionPlan.run`` with store serving + materialization on, so
+     the executed cone's outputs become reusable for the next version.
+
+The store is shared with checkpointing in spirit (same content-hash dedup
+scheme), so equivalent results are stored once (Use case 2: no periodic
+de-duplication pass needed), and every *semantic* reuse decision is
+recorded with its replayable ``Certificate`` in ``self.certificates`` —
+serving a cached result is the verdict that most needs an audit trail.
+
+All timing uses ``time.perf_counter`` (monotonic), and
+``ReuseStats.recompute_time_saved`` totals the recorded original compute
+cost of every served table — benchmark deltas are immune to wall-clock
+adjustments.
 """
 
 from __future__ import annotations
 
-import hashlib
-import json
-import pathlib
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
-
-import numpy as np
 
 from repro.api.certificate import Certificate, certificate_from_evidence
 from repro.api.config import VeerConfig
 from repro.api.registry import EVRegistry
 from repro.core.dag import DataflowDAG
-from repro.core.edits import identity_mapping
+from repro.core.edits import EditMapping
 from repro.core.ev.cache import VerdictCache
+from repro.core.frontier import FrontierError, compute_reuse_frontier
 from repro.core.verifier import Veer
-from repro.engine.executor import execute
+from repro.engine.executor import ExecutionPlan
+from repro.engine.store import DiskMaterializationStore
 from repro.engine.table import Table
+
+# The operator-level disk store now backs the reuse layer; the name is
+# re-exported so `from repro.reuse import MaterializationStore` keeps
+# importing, but the pre-refactor whole-table API (put(table) ->
+# (digest, wrote) / get(digest)) is GONE — callers use the key-addressed
+# repro.engine.store protocol (put(key, table) -> wrote / get(key)).
+MaterializationStore = DiskMaterializationStore
 
 
 @dataclass
@@ -41,68 +64,26 @@ class ReuseStats:
     sink_hits: int = 0
     sink_misses: int = 0
     executions: int = 0
-    verify_time: float = 0.0
-    execute_time: float = 0.0
+    verify_time: float = 0.0           # perf_counter deltas
+    execute_time: float = 0.0          # perf_counter deltas
     dedup_skipped_writes: int = 0
     verdict_cache_hits: int = 0
     certified_reuses: int = 0   # reuse decisions backed by a replayable cert
+    # operator-level accounting (new with the content-addressed store)
+    interior_hits: int = 0      # non-sink tables served during partial exec
+    ops_executed: int = 0
+    ops_reused: int = 0
+    # recorded original compute seconds every served table avoided — the
+    # honest counterpart to execute_time for benchmark deltas
+    recompute_time_saved: float = 0.0
 
 
 @dataclass
 class _Version:
     vid: int
     dag: DataflowDAG
-    sink_objects: Dict[str, str]  # sink id -> object digest
-
-
-class MaterializationStore:
-    def __init__(self, directory: str):
-        self.dir = pathlib.Path(directory)
-        self.dir.mkdir(parents=True, exist_ok=True)
-
-    def put(self, table: Table) -> Tuple[str, bool]:
-        h = hashlib.sha256()
-        h.update(repr(table.order).encode())
-        for c in table.order:
-            arr = table.cols[c]
-            h.update(np.asarray(arr, dtype=object if arr.dtype == object else arr.dtype).tobytes() if arr.dtype != object else repr(list(arr)).encode())
-        digest = h.hexdigest()[:32]
-        path = self.dir / f"{digest}.npz"
-        if path.exists():
-            return digest, False
-        payload = {}
-        meta = {"order": table.order, "object_cols": []}
-        for c in table.order:
-            arr = table.cols[c]
-            if arr.dtype == object:
-                meta["object_cols"].append(c)
-                payload[c] = np.array([json.dumps(_jsonable(v)) for v in arr])
-            else:
-                payload[c] = arr
-        np.savez(path, **payload)
-        (self.dir / f"{digest}.json").write_text(json.dumps(meta))
-        return digest, True
-
-    def get(self, digest: str) -> Table:
-        meta = json.loads((self.dir / f"{digest}.json").read_text())
-        data = np.load(self.dir / f"{digest}.npz", allow_pickle=False)
-        cols = {}
-        for c in meta["order"]:
-            arr = data[c]
-            if c in meta["object_cols"]:
-                arr = np.array([json.loads(s) for s in arr], dtype=object)
-            cols[c] = arr
-        return Table(cols, meta["order"])
-
-
-def _jsonable(v):
-    if isinstance(v, (np.integer,)):
-        return int(v)
-    if isinstance(v, (np.floating,)):
-        return float(v)
-    if isinstance(v, (list, tuple, np.ndarray)):
-        return [_jsonable(x) for x in v]
-    return v
+    digests: Dict[str, Optional[str]]   # op id -> content digest
+    sink_keys: Dict[str, str]           # sink id -> store key actually served
 
 
 class ReuseManager:
@@ -115,10 +96,12 @@ class ReuseManager:
         registry: Optional[EVRegistry] = None,
         semantics: Optional[str] = None,
         verdict_cache: Optional[VerdictCache] = None,
+        byte_budget: Optional[int] = None,
     ):
         """Preferred construction: ``config=VeerConfig(...)`` (the
         ``repro.api`` surface); passing a pre-built ``veer`` remains
-        supported for older callers.  Reuse decisions carry replayable
+        supported for older callers.  ``byte_budget`` bounds the on-disk
+        store with LRU eviction.  Reuse decisions carry replayable
         certificates (``self.certificates``) — serving a stored result is
         exactly the kind of verdict an auditor wants evidence for."""
         if veer is not None and config is not None:
@@ -129,7 +112,7 @@ class ReuseManager:
         if semantics is None:
             semantics = config.semantics if config is not None else "bag"
         self.config = config
-        self.store = MaterializationStore(directory)
+        self.store = DiskMaterializationStore(directory, byte_budget=byte_budget)
         # EV verdicts live next to the materializations: one content-addressed
         # directory of reusable artifacts, shared across sessions (and with
         # VersionChainSession when handed the same cache).  An explicit
@@ -146,6 +129,7 @@ class ReuseManager:
         self.verdict_cache = verdict_cache
         self.veer = veer
         self.semantics = semantics
+        self._registry = registry
         self.versions: List[_Version] = []
         self.stats = ReuseStats()
         # certificate per reuse decision: (new version index, matched
@@ -158,53 +142,137 @@ class ReuseManager:
         """Execute (or reuse) a pipeline version; returns sink tables."""
         self.stats.submissions += 1
         dag.validate()
+        plan = ExecutionPlan(dag, sources)
+        digests = plan.digests
         sinks = dag.sinks
         results: Dict[str, Table] = {}
         remaining = set(sinks)
+        sink_keys: Dict[str, str] = {}
 
+        # sinks the content digests cannot serve directly need Veer; the
+        # rest resolve during partial execution (path 1, no verification)
+        unresolved = {
+            s for s in remaining
+            if digests[s] is None or digests[s] not in self.store
+        }
+        if unresolved:
+            self._serve_semantic(
+                dag, digests, unresolved, remaining, results, sink_keys
+            )
+
+        if remaining:
+            before = self.store.stats()
+            t0 = time.perf_counter()
+            res = plan.run(
+                store=self.store,
+                serve_from_store=True,
+                materialize=True,
+                keep=sorted(remaining),
+            )
+            self.stats.execute_time += time.perf_counter() - t0
+            after = self.store.stats()
+            if res.stats.ops_executed:
+                self.stats.executions += 1
+            self.stats.ops_executed += res.stats.ops_executed
+            self.stats.ops_reused += res.stats.ops_reused
+            self.stats.recompute_time_saved += res.stats.recompute_time_saved
+            self.stats.dedup_skipped_writes += (
+                after["dedup_skipped_writes"] - before["dedup_skipped_writes"]
+            )
+            reused = set(res.reused_ops)
+            for s in remaining:
+                results[s] = res.results[s]
+                sink_keys[s] = digests[s]
+                if s in reused:
+                    self.stats.sink_hits += 1
+                else:
+                    self.stats.sink_misses += 1
+            self.stats.interior_hits += res.stats.tables_served - len(
+                remaining & reused
+            )
+
+        self.versions.append(
+            _Version(len(self.versions), dag, digests, sink_keys)
+        )
+        self.verdict_cache.save()  # verdicts persist like materializations do
+        return results
+
+    def _serve_semantic(
+        self,
+        dag: DataflowDAG,
+        digests: Dict[str, Optional[str]],
+        unresolved: set,
+        remaining: set,
+        results: Dict[str, Table],
+        sink_keys: Dict[str, str],
+    ) -> None:
+        """Path 2: verify against earlier versions, serve sinks off the
+        certificate's reuse frontier (Def 2.2 equality, source-guarded)."""
         for prev in reversed(self.versions):
-            if not remaining:
-                break
+            if not unresolved:
+                return
             t0 = time.perf_counter()
             verdict, vstats, evidence = self.veer.verify_with_evidence(
                 prev.dag, dag, semantics=self.semantics
             )
             self.stats.verify_time += time.perf_counter() - t0
             self.stats.verdict_cache_hits += vstats.cache_hits
-            if verdict is True:
-                mapping = identity_mapping(prev.dag, dag).forward
-                served = 0
-                for psink, digest in prev.sink_objects.items():
-                    qsink = mapping.get(psink)
-                    if qsink in remaining:
-                        results[qsink] = self.store.get(digest)
-                        remaining.discard(qsink)
-                        self.stats.sink_hits += 1
-                        served += 1
-                if served:
-                    # only decisions that actually served a result enter the
-                    # audit trail — an equivalent version whose sinks were
-                    # already covered reused nothing
-                    cert = certificate_from_evidence(evidence)
-                    if cert is not None:
-                        self.certificates.append((len(self.versions), prev.vid, cert))
-                        self.stats.certified_reuses += 1
-
-        if remaining:
-            t0 = time.perf_counter()
-            executed = execute(dag, sources)
-            self.stats.execute_time += time.perf_counter() - t0
-            self.stats.executions += 1
-            for s in remaining:
-                results[s] = executed[s]
-                self.stats.sink_misses += 1
-
-        sink_objects = {}
-        for s in sinks:
-            digest, wrote = self.store.put(results[s])
-            if not wrote:
-                self.stats.dedup_skipped_writes += 1
-            sink_objects[s] = digest
-        self.versions.append(_Version(len(self.versions), dag, sink_objects))
-        self.verdict_cache.save()  # verdicts persist like materializations do
-        return results
+            if verdict is not True:
+                continue
+            cert = certificate_from_evidence(evidence)
+            if cert is None:
+                continue
+            try:
+                # reuse is only ever taken on a certificate that replays
+                # green *bound to this pair* (tampered/truncated/foreign
+                # evidence yields no frontier, never a wider one)
+                frontier = compute_reuse_frontier(
+                    cert, prev.dag, dag, registry=self._registry
+                )
+            except FrontierError:
+                continue
+            # source guard: Def 2.2 transfer needs the SAME concrete inputs —
+            # every source of the matched version must map to a current
+            # source bound to a byte-identical table
+            fwd = EditMapping(cert.mapping).forward
+            if not all(
+                fwd.get(s) is not None
+                and prev.digests.get(s) is not None
+                and prev.digests.get(s) == digests.get(fwd[s])
+                for s in prev.dag.sources
+            ):
+                continue
+            # what may stand in for an unresolved sink: a frontier entry,
+            # or — the Def 2.2 pair-level guarantee the True verdict itself
+            # makes — the prev-version sink it maps to (corresponding sinks
+            # of an equivalent pair are equal under the table semantics)
+            bwd = EditMapping(cert.mapping).backward
+            reusable = {**frontier.semantic, **frontier.exact}
+            served = 0
+            for q in sorted(unresolved):
+                p = reusable.get(q)
+                if p is None:
+                    mapped = bwd.get(q)
+                    if mapped is not None and mapped in prev.sink_keys:
+                        p = mapped
+                if p is None:
+                    continue
+                key = prev.sink_keys.get(p) or prev.digests.get(p)
+                if key is None:
+                    continue
+                table = self.store.get(key)
+                if table is None:
+                    continue  # evicted or corrupt: fall through to execution
+                results[q] = table
+                sink_keys[q] = key
+                unresolved.discard(q)
+                remaining.discard(q)
+                self.stats.sink_hits += 1
+                self.stats.recompute_time_saved += self.store.recorded_cost(key)
+                served += 1
+            if served:
+                # only decisions that actually served a result enter the
+                # audit trail — an equivalent version whose sinks were
+                # already covered reused nothing
+                self.certificates.append((len(self.versions), prev.vid, cert))
+                self.stats.certified_reuses += 1

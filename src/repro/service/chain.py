@@ -48,7 +48,11 @@ from repro.core.dag import DataflowDAG
 from repro.core.edits import EditMapping
 from repro.core.ev.base import BaseEV
 from repro.core.ev.cache import VerdictCache
+from repro.core.frontier import FrontierError, ReuseFrontier, compute_reuse_frontier
 from repro.core.verifier import Veer, VeerStats, make_veer_plus
+from repro.engine.executor import ExecStats, ExecutionPlan
+from repro.engine.store import MaterializationStore
+from repro.engine.table import Table
 from repro.service.pair_cache import PairVerdictCache
 
 
@@ -68,6 +72,13 @@ class PairReport:
     # verdict + certificate reused wholesale from a PairVerdictCache hit
     # (no search ran for this pair; stats carry only the avoided work)
     reused: bool = False
+    # execute-with-reuse mode (sources= passed to submit): accounting for
+    # this version's partial execution, the certificate-derived frontier
+    # that seeded it, and the sink tables (results are handed to the
+    # submit caller only — the session-lifetime report drops them)
+    exec_stats: Optional[ExecStats] = None
+    frontier: Optional[ReuseFrontier] = None
+    results: Optional[Dict[str, Table]] = None
 
     def __post_init__(self) -> None:
         if self.certificate is not None:
@@ -92,12 +103,19 @@ class PairReport:
     def row(self) -> str:
         v = {True: "EQ", False: "NEQ", None: "UNK"}[self.verdict]
         cert = "cert" if self.certified else "----"
-        return (
+        line = (
             f"pair {self.index:>3}: {v:>3}  {cert}  ev_calls={self.ev_calls:<4} "
             f"cache_hits={self.cache_hits:<4} saved={self.ev_calls_saved:<4} "
             f"{self.wall_time * 1e3:8.1f} ms"
             + ("  reused" if self.reused else "")
         )
+        if self.exec_stats is not None:
+            e = self.exec_stats
+            line += (
+                f"  exec[{e.ops_executed}/{e.ops_total} ops, "
+                f"{e.ops_reused} reused, {e.tables_served} served]"
+            )
+        return line
 
 
 @dataclass
@@ -105,6 +123,38 @@ class ChainReport:
     """Aggregate over all pairs verified so far in a session."""
 
     pairs: List[PairReport] = field(default_factory=list)
+    # execute-with-reuse: accounting for the chain's FIRST version (it has
+    # no pair — v1 executes fully and materializes the seed corpus)
+    initial_exec: Optional[ExecStats] = None
+
+    @property
+    def exec_stats_list(self) -> List[ExecStats]:
+        out = [self.initial_exec] if self.initial_exec is not None else []
+        out.extend(p.exec_stats for p in self.pairs if p.exec_stats is not None)
+        return out
+
+    @property
+    def total_ops_executed(self) -> int:
+        return sum(e.ops_executed for e in self.exec_stats_list)
+
+    @property
+    def total_ops_reused(self) -> int:
+        return sum(e.ops_reused for e in self.exec_stats_list)
+
+    @property
+    def total_tables_served(self) -> int:
+        return sum(e.tables_served for e in self.exec_stats_list)
+
+    @property
+    def total_ops(self) -> int:
+        return sum(e.ops_total for e in self.exec_stats_list)
+
+    @property
+    def executed_fraction(self) -> float:
+        """Share of all chain operators that actually ran ``execute_op`` —
+        the headline the exec benchmark bounds (≤ 0.30 on the 12-version
+        workload with a warm verdict cache)."""
+        return self.total_ops_executed / max(1, self.total_ops)
 
     @property
     def total_ev_calls(self) -> int:
@@ -153,6 +203,13 @@ class ChainReport:
             f"{self.total_ev_calls_saved} calls saved, "
             f"{self.total_wall_time * 1e3:.1f} ms"
         )
+        if self.exec_stats_list:
+            lines.append(
+                f"exec:  {self.total_ops_executed}/{self.total_ops} ops "
+                f"executed ({100.0 * self.executed_fraction:.0f}%), "
+                f"{self.total_ops_reused} reused, "
+                f"{self.total_tables_served} tables served"
+            )
         return "\n".join(lines)
 
 
@@ -177,6 +234,7 @@ class VersionChainSession:
         veer: Optional[Veer] = None,
         keep_certificates: bool = True,
         pair_cache: Optional["PairVerdictCache"] = None,
+        materialization_store: Optional[MaterializationStore] = None,
         **veer_kw,
     ):
         """The preferred construction path is ``config=VeerConfig(...)``
@@ -196,7 +254,18 @@ class VersionChainSession:
         any session sharing the cache: a content-digest hit reuses the
         original verdict *and certificate* without running the search —
         this is how a ``VerificationService`` answers N clients evolving
-        the same pipeline for one client's worth of work."""
+        the same pipeline for one client's worth of work.
+
+        ``materialization_store`` enables **execute-with-reuse**: pass
+        ``sources=`` to ``submit`` and the session executes each version
+        through an ``ExecutionPlan``, materializing operator outputs into
+        the store and seeding every successor from the certificate-derived
+        reuse frontier (``repro.core.frontier``) — v1 runs fully, each
+        later version recomputes only its changed cone.  Seeding is taken
+        only from exact-tier frontier entries whose content digests match,
+        so the returned sink tables are bit-identical to a full
+        re-execution; frontier reuse is only ever taken when the pair's
+        certificate replays green against the pair."""
         if config is not None and (evs is not None or veer is not None or veer_kw):
             raise ValueError("pass either config or evs/veer/veer_kw, not both")
         if veer is not None and (evs is not None or veer_kw):
@@ -234,9 +303,12 @@ class VersionChainSession:
         self.semantics = semantics
         self.keep_certificates = keep_certificates
         self.pair_cache = pair_cache
+        self.store = materialization_store
+        self._registry = registry
         # only the previous version is needed for the next pair; a long-lived
         # session must not accumulate every DAG it ever saw
         self._prev: Optional[DataflowDAG] = None
+        self._prev_plan: Optional[ExecutionPlan] = None
         self.version_count = 0
         self._report = ChainReport()
 
@@ -245,6 +317,8 @@ class VersionChainSession:
         self,
         version: DataflowDAG,
         mapping: Optional[EditMapping] = None,
+        *,
+        sources: Optional[Dict[str, Table]] = None,
     ) -> Optional[PairReport]:
         """Append a version; verify it against the previous one.
 
@@ -252,14 +326,55 @@ class VersionChainSession:
         this one (defaults to the id-stable identity mapping, the natural
         choice when the version-control layer assigns stable operator ids).
         Returns ``None`` for the first version (nothing to verify yet).
+
+        ``sources`` (execute-with-reuse mode; needs a session
+        ``materialization_store``) additionally *executes* the version:
+        the first version runs fully, successors recompute only the cone
+        the edit touched, seeded from exact-tier frontier entries of the
+        pair's replay-green certificate.  The returned report then carries
+        ``exec_stats``, the ``frontier``, and the sink ``results`` —
+        including for the **first** version, which gets a report (verdict
+        ``None``, nothing to verify) instead of the verify-only ``None``.
         """
         version.validate()
+        if sources is not None and self.store is None:
+            # checked before any session state moves: a rejected submit must
+            # leave the chain exactly where it was
+            raise ValueError(
+                "execute-with-reuse needs a session materialization_store"
+            )
         prev, self._prev = self._prev, version
         self.version_count += 1
+        plan: Optional[ExecutionPlan] = None
+        if sources is not None:
+            plan = ExecutionPlan(version, sources)
+        prev_plan, self._prev_plan = self._prev_plan, plan
+
         if prev is None:
-            return None
+            if plan is None:
+                return None
+            res = plan.run(store=self.store, materialize=True)
+            self._report.initial_exec = res.stats
+            return PairReport(
+                index=0,
+                verdict=None,
+                wall_time=res.stats.wall_time,
+                stats=VeerStats(),
+                exec_stats=res.stats,
+                results=res.results,
+            )
+
         t0 = time.perf_counter()
         verdict, stats, certificate, reused = self._decide(prev, version, mapping)
+        exec_stats = frontier = results = None
+        if plan is not None:
+            frontier, seed_keys = self._frontier_seeds(
+                prev, version, certificate, verdict, prev_plan, plan
+            )
+            res = plan.run(
+                store=self.store, seed_keys=seed_keys, materialize=True
+            )
+            exec_stats, results = res.stats, res.results
         report = PairReport(
             index=self.version_count - 1,
             verdict=verdict,
@@ -267,15 +382,53 @@ class VersionChainSession:
             stats=stats,
             certificate=certificate,
             reused=reused,
+            exec_stats=exec_stats,
+            frontier=frontier,
+            results=results,
         )
-        if self.keep_certificates:
-            self._report.pairs.append(report)
-        else:
-            # keep the truthful certified flag, drop the heavy payload
-            self._report.pairs.append(
-                dataclasses.replace(report, certificate=None)
-            )
+        # the session-lifetime report never accumulates sink tables; the
+        # certificate/frontier payloads follow keep_certificates
+        stored = dataclasses.replace(report, results=None)
+        if not self.keep_certificates:
+            stored = dataclasses.replace(stored, certificate=None, frontier=None)
+        self._report.pairs.append(stored)
         return report
+
+    def _frontier_seeds(
+        self,
+        prev: DataflowDAG,
+        version: DataflowDAG,
+        certificate: Optional[Certificate],
+        verdict: Optional[bool],
+        prev_plan: Optional[ExecutionPlan],
+        plan: ExecutionPlan,
+    ):
+        """Certificate-gated seeding for this version's partial execution.
+
+        Only a True verdict whose certificate **replays green bound to the
+        pair** yields a frontier (``compute_reuse_frontier`` enforces it);
+        only *exact-tier* entries are seeded, and each one additionally
+        requires digest equality between the Q operator's cone (current
+        sources folded in) and the P operator's materialized table — so a
+        source rebinding or any mismatch falls back to recomputation and
+        the executed results stay bit-identical to a full run.
+        """
+        if verdict is not True or certificate is None or prev_plan is None:
+            return None, {}
+        try:
+            frontier = compute_reuse_frontier(
+                certificate, prev, version, registry=self._registry
+            )
+        except FrontierError:
+            return None, {}
+        prev_digests = prev_plan.digests
+        cur_digests = plan.digests
+        seed_keys = {}
+        for q_op, p_op in frontier.exact.items():
+            key = prev_digests.get(p_op)
+            if key is not None and cur_digests.get(q_op) == key:
+                seed_keys[q_op] = key
+        return frontier, seed_keys
 
     def _decide(
         self,

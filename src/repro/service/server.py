@@ -193,6 +193,14 @@ class VerificationService:
         once — concurrent duplicates coalesce onto a single search whose
         verdict and certificate every waiter reuses.  On by default; turn
         off to force every client to run its own searches.
+    materialization_store:
+        A shared, thread-safe ``repro.engine.MaterializationStore``
+        (both built-in stores lock internally).  Enables execute-with-reuse
+        per client: ``submit(..., sources=...)`` executes the version's
+        changed cone only, seeded from the pair certificate's frontier —
+        equivalent results materialized by *any* client's chain are
+        content-addressed, so clients evolving the same pipeline share
+        tables the same way they share verdicts.
     """
 
     def __init__(
@@ -205,6 +213,7 @@ class VerificationService:
         queue_size: int = 64,
         keep_certificates: bool = True,
         share_pair_verdicts: bool = True,
+        materialization_store=None,
     ):
         if workers < 1:
             raise ValueError("need at least one worker")
@@ -221,6 +230,7 @@ class VerificationService:
             )
         )
         self.pair_cache = PairVerdictCache() if share_pair_verdicts else None
+        self.materialization_store = materialization_store
         self.keep_certificates = keep_certificates
         self._queue: "queue.Queue[object]" = queue.Queue(maxsize=queue_size)
         self._clients: Dict[str, _ClientState] = {}
@@ -263,6 +273,7 @@ class VerificationService:
         version: DataflowDAG,
         mapping: Optional[EditMapping] = None,
         *,
+        sources=None,
         block: bool = True,
         timeout: Optional[float] = None,
     ) -> "Future[Optional[PairReport]]":
@@ -272,6 +283,8 @@ class VerificationService:
         client's first version).  Jobs of one client run strictly in
         submission order; the call blocks when the queue is full unless
         ``block=False``/``timeout`` asks for ``ServiceBusy`` instead.
+        ``sources`` opts this version into execute-with-reuse (needs the
+        service's ``materialization_store``; see ``VersionChainSession``).
         """
         state = self._client(client_id)  # built outside the service lock
         with self._lock:
@@ -291,7 +304,9 @@ class VerificationService:
                 job = _Job(
                     client=state,
                     ticket=ticket,
-                    fn=lambda: state.session.submit(version, mapping),
+                    fn=lambda: state.session.submit(
+                        version, mapping, sources=sources
+                    ),
                     future=future,
                 )
                 self._enqueue(job, block, timeout)
@@ -380,7 +395,10 @@ class VerificationService:
             # snapshot: the live ChainReports keep growing if the caller
             # submits after drain, so hand out copies like errors/pair_results
             sessions = {
-                cid: ChainReport(pairs=list(st.session.report().pairs))
+                cid: ChainReport(
+                    pairs=list(st.session.report().pairs),
+                    initial_exec=st.session.report().initial_exec,
+                )
                 for cid, st in self._clients.items()
             }
             errors = list(self._errors)
@@ -454,6 +472,7 @@ class VerificationService:
             cache=self.cache,
             keep_certificates=self.keep_certificates,
             pair_cache=self.pair_cache,
+            materialization_store=self.materialization_store,
         )
         with self._lock:
             return self._clients.setdefault(client_id, _ClientState(session))

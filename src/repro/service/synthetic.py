@@ -34,7 +34,9 @@ class _BranchState:
     redundant: bool = False  # extra filter fe (implied by fb) present
 
 
-def _branch(j: int, state: _BranchState) -> Tuple[List[Operator], List[Link]]:
+def _branch(
+    j: int, state: _BranchState, heavy: bool = False
+) -> Tuple[List[Operator], List[Link]]:
     fa = op(f"fa{j}", D.FILTER, pred=Pred.cmp("a", ">", 2))
     fb = op(f"fb{j}", D.FILTER, pred=Pred.cmp("b", "<", 5))
     ops = [
@@ -51,23 +53,38 @@ def _branch(j: int, state: _BranchState) -> Tuple[List[Operator], List[Link]]:
         # keeps the filter-swap windows isomorphic across branches
         ops.append(op(f"fe{j}", D.FILTER, pred=Pred.cmp("b", "<", 9)))
         order = [f"fe{j}"] + order
-    path = [f"src{j}"] + order + [f"proj{j}", f"sink{j}"]
+    tail = [f"proj{j}"]
+    if heavy:
+        # expensive, deterministic downstream: a per-row classifier and a
+        # grouping aggregate, downstream of (and untouched by) the rewrites
+        # — the regime where execution dominates verification and
+        # materialization reuse pays (benchmarks/exec_bench.py)
+        ops.append(
+            op(f"cl{j}", D.CLASSIFIER, col="a", out="label",
+               model="chain", classes=5)
+        )
+        ops.append(
+            op(f"agg{j}", D.AGGREGATE, group_by=("label",),
+               aggs=(("sum", "a", "sa"), ("count", "*", "n")))
+        )
+        tail += [f"cl{j}", f"agg{j}"]
+    path = [f"src{j}"] + order + tail + [f"sink{j}"]
     links = [Link(a, b) for a, b in zip(path, path[1:])]
     return ops, links
 
 
-def _build(states: List[_BranchState]) -> DataflowDAG:
+def _build(states: List[_BranchState], heavy: bool = False) -> DataflowDAG:
     ops: List[Operator] = []
     links: List[Link] = []
     for j, st in enumerate(states):
-        o, l = _branch(j, st)
+        o, l = _branch(j, st, heavy)
         ops += o
         links += l
     return DataflowDAG(ops, links)
 
 
 def make_chain(
-    n_versions: int, branches: Optional[int] = None
+    n_versions: int, branches: Optional[int] = None, heavy: bool = False
 ) -> List[DataflowDAG]:
     """A chain of ``n_versions`` dataflows, each 1-2 changes from the last.
 
@@ -77,7 +94,9 @@ def make_chain(
     already paid for.  Every third pair additionally toggles the redundant
     head filter of the next branch over.  ``branches`` defaults to
     ``n_versions - 1`` (each branch is swapped at most once along the
-    chain).  Deterministic — same arguments, same chain.
+    chain).  ``heavy=True`` appends an expensive classifier + aggregate
+    tail to every branch (the execution-reuse benchmark's workload).
+    Deterministic — same arguments, same chain.
     """
     if n_versions < 2:
         raise ValueError("a chain needs at least 2 versions")
@@ -86,12 +105,12 @@ def make_chain(
     if branches < 1:
         raise ValueError("need at least one branch")
     states = [_BranchState() for _ in range(branches)]
-    versions = [_build(states)]
+    versions = [_build(states, heavy)]
     for k in range(1, n_versions):
         j = (k - 1) % branches
         states[j] = replace(states[j], swapped=not states[j].swapped)
         if k % 3 == 0:
             i = k % branches
             states[i] = replace(states[i], redundant=not states[i].redundant)
-        versions.append(_build(states))
+        versions.append(_build(states, heavy))
     return versions
