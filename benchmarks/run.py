@@ -36,6 +36,7 @@ def main() -> None:
         roofline_bench,
         search_bench,
         service_bench,
+        session_bench,
         table1_ev_support,
         table5_comparison,
         table6_optimizations,
@@ -115,6 +116,22 @@ def main() -> None:
         f"speedup={r['speedup']:.1f}x pairs_per_sec={r['svc_pairs_per_sec']:.0f} "
         f"ev_calls_saved={r['ev_calls_saved_pct']:.0f}% "
         f"replay_ok={r['replay_ok_pct']:.0f}%",
+    ))
+
+    print("\n== Edit-session stress: generated traffic + differential oracles ==")
+    t0 = time.perf_counter()
+    from repro.workload import WorkloadConfig
+
+    _, h, _ = session_bench.run(
+        WorkloadConfig(sessions=4, clients=4, chain_length=8,
+                       max_decompositions=60),
+        baseline=False,
+    )
+    csv_lines.append(_csv(
+        "session_bench", time.perf_counter() - t0,
+        f"pairs={h['pairs']} pairs_per_sec={h['pairs_per_sec']:.1f} "
+        f"verified={100 * h['verified_fraction']:.0f}% "
+        f"violations={h['violations']}",
     ))
 
     print("\n== Execute-with-reuse: chain time vs full re-execution ==")

@@ -295,10 +295,26 @@ def _schema_at(dag: DataflowDAG, op_id: str) -> List[str]:
 
 
 def apply_equivalent_edits(
-    dag: DataflowDAG, n: int, seed: int = 0, kinds: Optional[List[str]] = None
+    dag: DataflowDAG,
+    n: int,
+    seed: int = 0,
+    kinds: Optional[List[str]] = None,
+    rng: Optional[random.Random] = None,
+    prefix: str = "",
 ) -> DataflowDAG:
-    """Apply n Calcite-style rewrites at random valid placements."""
-    rng = random.Random(seed)
+    """Apply n Calcite-style rewrites at random valid placements.
+
+    Determinism contract: all randomness comes from one explicit
+    ``random.Random`` — either the ``rng`` the caller threads through (the
+    workload generator's per-session stream) or a fresh ``Random(seed)``.
+    No module-level ``random``/``np.random`` state is ever touched, so the
+    same ``(dag, n, seed/rng-state, kinds)`` always yields a byte-identical
+    result (regression-tested in ``tests/test_workload_stress.py``).
+    ``prefix`` namespaces the ids of inserted operators so repeated
+    applications along one edit session never collide.
+    """
+    if rng is None:
+        rng = random.Random(seed)
     q = dag
     kinds = kinds or ["empty_project", "empty_filter", "swap_filters", "split_filter", "scale_pred"]
     applied = 0
@@ -310,9 +326,9 @@ def apply_equivalent_edits(
             l = rng.choice(_one_to_one_edges(q))
             if kind == "empty_project":
                 sch = _schema_at(q, l.src)
-                new = op(f"ep{applied}_{guard}", D.PROJECT, cols=_id_proj(sch))
+                new = op(f"{prefix}ep{applied}_{guard}", D.PROJECT, cols=_id_proj(sch))
             else:
-                new = op(f"ef{applied}_{guard}", D.FILTER, pred=Pred.true())
+                new = op(f"{prefix}ef{applied}_{guard}", D.FILTER, pred=Pred.true())
             q = _splice(q, l, new)
             applied += 1
         elif kind == "swap_filters":
@@ -350,7 +366,7 @@ def apply_equivalent_edits(
             p = f_op.get("pred")
             below = q.in_links[f_op.id][0]
             q = q.replace_op(f_op.with_props(pred=Pred.and_(*p.children[1:])))
-            new = op(f"fs{applied}_{guard}", D.FILTER, pred=p.children[0])
+            new = op(f"{prefix}fs{applied}_{guard}", D.FILTER, pred=p.children[0])
             q = _splice(q, Link(below.src, f_op.id, below.dst_port), new)
             applied += 1
         elif kind == "scale_pred":
@@ -369,11 +385,22 @@ def apply_equivalent_edits(
 
 
 def apply_inequivalent_edits(
-    dag: DataflowDAG, n: int, seed: int = 0, kinds: Optional[List[str]] = None
+    dag: DataflowDAG,
+    n: int,
+    seed: int = 0,
+    kinds: Optional[List[str]] = None,
+    rng: Optional[random.Random] = None,
+    prefix: str = "",
 ) -> DataflowDAG:
     """TPC-DS-iterative-style semantic edits.  ``drop_proj_col`` mimics the
-    real-workload edits (paper W5-W8) that §7.4's symbolic check catches."""
-    rng = random.Random(seed + 1)
+    real-workload edits (paper W5-W8) that §7.4's symbolic check catches.
+
+    Same determinism contract as ``apply_equivalent_edits``: one explicit
+    ``random.Random`` (threaded ``rng`` or fresh ``Random(seed + 1)``), no
+    module-level random state, ``prefix``-namespaced inserted-operator ids.
+    """
+    if rng is None:
+        rng = random.Random(seed + 1)
     q = dag
     applied = 0
     guard = 0
@@ -422,15 +449,18 @@ def apply_inequivalent_edits(
             l = rng.choice(_one_to_one_edges(q))
             sch = _schema_at(q, l.src)
             col = rng.choice(list(sch))
-            new = op(f"nf{applied}_{guard}", D.FILTER, pred=Pred.cmp(col, "<", rng.randint(2, 5)))
+            new = op(f"{prefix}nf{applied}_{guard}", D.FILTER, pred=Pred.cmp(col, "<", rng.randint(2, 5)))
             q = _splice(q, l, new)
             applied += 1
     return q
 
 
-def edits_with_distance(dag: DataflowDAG, hops: int, seed: int = 0) -> DataflowDAG:
+def edits_with_distance(
+    dag: DataflowDAG, hops: int, seed: int = 0, prefix: str = "fe"
+) -> DataflowDAG:
     """Two empty-filter edits separated by `hops` one-to-one operators
-    (paper Fig 26). Requires a chain of ≥ hops+1 consecutive 1-1 ops."""
+    (paper Fig 26). Requires a chain of ≥ hops+1 consecutive 1-1 ops.
+    ``prefix`` namespaces the two inserted filter ids (``<prefix>_a/_b``)."""
     # find a chain of one-input/one-output ops
     chain_edges = _one_to_one_edges(dag)
     # walk chains
@@ -444,12 +474,12 @@ def edits_with_distance(dag: DataflowDAG, hops: int, seed: int = 0) -> DataflowD
             path.append(outs[0])
             cur = outs[0].dst
         if len(path) > hops:
-            q = _splice(dag, path[0], op("fe_a", D.FILTER, pred=Pred.true()))
+            q = _splice(dag, path[0], op(f"{prefix}_a", D.FILTER, pred=Pred.true()))
             if hops == 0:
                 # adjacent edits: the second splice goes on the NEW edge
-                tail = Link("fe_a", path[0].dst, path[0].dst_port)
+                tail = Link(f"{prefix}_a", path[0].dst, path[0].dst_port)
             else:
                 tail = path[hops]
-            q = _splice(q, tail, op("fe_b", D.FILTER, pred=Pred.true()))
+            q = _splice(q, tail, op(f"{prefix}_b", D.FILTER, pred=Pred.true()))
             return q
     raise ValueError(f"no chain with {hops} hops in workflow")

@@ -12,6 +12,13 @@ Because the branches are isomorphic and the rewrites recur, the chain is the
 canonical stress test for cross-pair verdict reuse: the *first* occurrence of
 each rewrite direction pays EV calls; every later occurrence — on any branch,
 in any later pair (or session) — is a fingerprint cache hit.
+
+Determinism: this module uses **no** random state at all (module-level or
+otherwise) — ``make_chain`` is a pure function of its arguments.  Randomized
+session generation lives in ``repro.workload`` (one explicit
+``random.Random`` per session, same-seed ⇒ byte-identical; see
+``tests/test_workload_stress.py``); this synthetic chain stays the fixed,
+hand-analyzable counterpart the service unit tests reason about exactly.
 """
 
 from __future__ import annotations

@@ -1,0 +1,186 @@
+"""``WorkloadConfig`` — one validated, serializable edit-session workload.
+
+The adversarial workload generator (``repro.workload.generator``) and the
+sustained-traffic replay driver (``repro.workload.replay``) are both driven
+by this one plain-data object, mirroring ``repro.api.VeerConfig``: callers
+say *what* traffic they want (session count, client concurrency, chain
+length, edit-family mix, QPS, seed) and the generator/driver wire the rest.
+Because the config is plain data it travels — log it next to a benchmark
+row (``BENCH_session.json`` embeds it), ship it to a stress worker, rebuild
+the byte-identical workload anywhere from the same seed.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass
+from typing import Any, Dict, Tuple
+
+# the five edit families the session generator samples from (ISSUE 6):
+#   equivalent   — Calcite-preserving rewrites (benchmarks/workloads.py)
+#   semantic     — TPC-DS-iterative semantic edits (ground truth unknown:
+#                  a dropped projection column may be provably unused)
+#   boundary     — two empty-filter edits 0-2 hops apart, stressing window
+#                  boundary growth (paper Fig 26)
+#   rename_storm — equivalence-preserving bulk renames of interior operator
+#                  ids with an explicit non-identity EditMapping, stressing
+#                  mapping plumbing and rename-invariant fingerprints
+#   churn_revert — apply an equivalent edit, revert it, re-apply it with
+#                  identical operator ids: the replayed pair is
+#                  content-identical to the first and must re-hit the
+#                  VerdictCache / PairVerdictCache
+EDIT_FAMILIES = (
+    "equivalent",
+    "semantic",
+    "boundary",
+    "rename_storm",
+    "churn_revert",
+)
+
+DEFAULT_EDIT_MIX: Tuple[Tuple[str, float], ...] = (
+    ("equivalent", 0.40),
+    ("semantic", 0.15),
+    ("boundary", 0.15),
+    ("rename_storm", 0.15),
+    ("churn_revert", 0.15),
+)
+
+DEFAULT_WORKLOADS = ("W1", "W2", "W3", "W4", "W5", "W6", "W7", "W8")
+
+
+class WorkloadConfigError(ValueError):
+    """An invalid ``WorkloadConfig`` (bad mix, unknown workload, bad QPS)."""
+
+
+@dataclass(frozen=True)
+class WorkloadConfig:
+    """Declarative description of one sustained edit-session workload.
+
+    ``seed`` fully determines the generated sessions: same config ⇒
+    byte-identical version chains, mappings and source tables (the
+    determinism regression tests rely on it).
+    """
+
+    seed: int = 0
+    # traffic shape
+    sessions: int = 4          # total edit sessions (one client id each)
+    clients: int = 4           # sessions submitted concurrently at a time
+    chain_length: int = 6      # versions per session (pairs = length - 1)
+    qps: float = 0.0           # global submit rate; 0 = open throttle
+    # edit-session grammar
+    workloads: Tuple[str, ...] = DEFAULT_WORKLOADS
+    edit_mix: Tuple[Tuple[str, float], ...] = DEFAULT_EDIT_MIX
+    max_edits_per_version: int = 2
+    # differential-oracle environment
+    rows: int = 30             # rows per generated source table
+    # search budget of the replayed verifier (semantic edits are UNK-heavy;
+    # a small budget keeps their exhausted searches cheap)
+    max_decompositions: int = 300
+
+    # -- convenience ---------------------------------------------------------
+    def replace(self, **changes: Any) -> "WorkloadConfig":
+        return dataclasses.replace(self, **changes)
+
+    @property
+    def mix(self) -> Dict[str, float]:
+        total = sum(w for _, w in self.edit_mix)
+        return {name: w / total for name, w in self.edit_mix}
+
+    @property
+    def total_pairs(self) -> int:
+        return self.sessions * (self.chain_length - 1)
+
+    # -- validation ----------------------------------------------------------
+    def validate(self) -> "WorkloadConfig":
+        from benchmarks.workloads import WORKLOADS  # late: avoids cycles
+
+        if not isinstance(self.seed, int):
+            raise WorkloadConfigError(f"seed must be an int, got {self.seed!r}")
+        for f in ("sessions", "clients", "chain_length", "max_edits_per_version",
+                  "rows", "max_decompositions"):
+            v = getattr(self, f)
+            if not isinstance(v, int) or v <= 0:
+                raise WorkloadConfigError(f"{f} must be a positive int, got {v!r}")
+        if self.chain_length < 2:
+            raise WorkloadConfigError("chain_length must be at least 2")
+        if not isinstance(self.qps, (int, float)) or self.qps < 0:
+            raise WorkloadConfigError(f"qps must be >= 0, got {self.qps!r}")
+        if not self.workloads:
+            raise WorkloadConfigError("config selects no workloads")
+        unknown = [w for w in self.workloads if w not in WORKLOADS]
+        if unknown:
+            raise WorkloadConfigError(
+                f"unknown workloads {unknown}; known: {sorted(WORKLOADS)}"
+            )
+        if not self.edit_mix:
+            raise WorkloadConfigError("edit_mix is empty")
+        bad = [n for n, _ in self.edit_mix if n not in EDIT_FAMILIES]
+        if bad:
+            raise WorkloadConfigError(
+                f"unknown edit families {bad}; known: {list(EDIT_FAMILIES)}"
+            )
+        names = [n for n, _ in self.edit_mix]
+        if len(set(names)) != len(names):
+            raise WorkloadConfigError(f"duplicate edit families in {names}")
+        if any(
+            not isinstance(w, (int, float)) or w < 0 for _, w in self.edit_mix
+        ) or sum(w for _, w in self.edit_mix) <= 0:
+            raise WorkloadConfigError(
+                f"edit_mix weights must be >= 0 with a positive sum: "
+                f"{self.edit_mix!r}"
+            )
+        return self
+
+    # -- serialization -------------------------------------------------------
+    def to_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["workloads"] = list(self.workloads)
+        d["edit_mix"] = [[n, w] for n, w in self.edit_mix]
+        return d
+
+    @staticmethod
+    def from_dict(d: Dict[str, Any]) -> "WorkloadConfig":
+        known = {f.name for f in dataclasses.fields(WorkloadConfig)}
+        unknown = set(d) - known
+        if unknown:
+            raise WorkloadConfigError(f"unknown config fields {sorted(unknown)}")
+        d = dict(d)
+        if "workloads" in d:
+            d["workloads"] = tuple(d["workloads"])
+        if "edit_mix" in d:
+            d["edit_mix"] = tuple((n, w) for n, w in d["edit_mix"])
+        return WorkloadConfig(**d)
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), sort_keys=True)
+
+    @staticmethod
+    def from_json(s: str) -> "WorkloadConfig":
+        return WorkloadConfig.from_dict(json.loads(s))
+
+
+def smoke_config(seed: int = 0) -> WorkloadConfig:
+    """The CI stress-smoke profile: ≥200 pairs over ≥4 concurrent clients,
+    sized so generation + replay + full differential oracle stay CI-fast."""
+    return WorkloadConfig(
+        seed=seed,
+        sessions=8,
+        clients=8,
+        chain_length=26,
+        workloads=DEFAULT_WORKLOADS,
+        max_decompositions=60,
+    )
+
+
+def extended_config(seed: int = 0) -> WorkloadConfig:
+    """The nightly-ish profile behind ``workflow_dispatch``: longer chains,
+    more sessions, a deeper search budget."""
+    return WorkloadConfig(
+        seed=seed,
+        sessions=16,
+        clients=8,
+        chain_length=40,
+        workloads=DEFAULT_WORKLOADS,
+        max_decompositions=300,
+    )

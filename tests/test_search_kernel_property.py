@@ -172,6 +172,61 @@ def test_backends_identical_on_multi_change_pairs(data):
 
 
 # ---------------------------------------------------------------------------
+# generated edit sessions (repro.workload): realistic multi-edit pairs
+# ---------------------------------------------------------------------------
+
+
+def _session_outcome(P, Q, mapping, backend, workers):
+    veer = Veer(
+        EVS, search_backend=backend, max_workers=workers,
+        max_decompositions=60,
+    )
+    try:
+        verdict, stats, evidence = veer.verify_with_evidence(P, Q, mapping)
+    finally:
+        veer.close()
+    cert = certificate_from_evidence(evidence)
+    return {
+        "verdict": verdict,
+        "decompositions": stats.decompositions_explored,
+        "windows_verified": stats.windows_verified,
+        "cert": cert.to_json() if cert is not None else None,
+    }
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    session_index=st.integers(0, 2),
+    pair_index=st.integers(1, 4),
+)
+def test_generated_session_pairs_identical_across_backends_and_workers(
+    seed, session_index, pair_index
+):
+    """The workload generator's realistic pairs — multi-edit Calcite
+    rewrites, semantic edits, boundary splices, rename storms with explicit
+    mappings — must walk identically through ``bitmask`` vs ``reference``
+    and through sequential vs parallel window dispatch (verdict, explored
+    counts, byte-identical certificate JSON)."""
+    from repro.workload import SessionGenerator, WorkloadConfig
+
+    cfg = WorkloadConfig(
+        seed=seed, sessions=3, clients=1, chain_length=5,
+        workloads=("W5", "W8"), rows=8, max_decompositions=60,
+    )
+    s = SessionGenerator(cfg).session(session_index)
+    planned = s.pairs[pair_index - 1]
+    P, Q = s.versions[pair_index - 1], s.versions[pair_index]
+    baseline = _session_outcome(P, Q, planned.mapping, "reference", 1)
+    for backend, workers in (("reference", 4), ("bitmask", 1), ("bitmask", 4)):
+        got = _session_outcome(P, Q, planned.mapping, backend, workers)
+        assert got == baseline, (
+            f"divergence on {s.session_id} pair {pair_index} "
+            f"({planned.kind}) backend={backend} workers={workers}"
+        )
+
+
+# ---------------------------------------------------------------------------
 # mask helpers == set helpers
 # ---------------------------------------------------------------------------
 
