@@ -33,6 +33,7 @@ def main() -> None:
         chain_bench,
         exec_bench,
         figs_scaling,
+        plane_bench,
         roofline_bench,
         search_bench,
         service_bench,
@@ -141,6 +142,17 @@ def main() -> None:
         "exec_bench", time.perf_counter() - t0,
         f"speedup={h['speedup']:.1f}x exec_fraction={h['exec_fraction'] * 100:.0f}% "
         f"tables_served={h['tables_served']}",
+    ))
+
+    print("\n== Data plane: jax lowering vs reference engine ==")
+    t0 = time.perf_counter()
+    h = plane_bench.run_chain(plane_bench.SMOKE_ROWS)
+    h.update(plane_bench.run_session())
+    csv_lines.append(_csv(
+        "plane_bench", time.perf_counter() - t0,
+        f"speedup={h['speedup']:.1f}x jax_rows_per_sec={h['jax_rows_per_s']} "
+        f"ops_lowered={h['ops_lowered']} "
+        f"certs_replayed={h['certificates_replayed_ok']}",
     ))
 
     print("\n== Search kernel: bitmask vs reference decompositions/sec ==")

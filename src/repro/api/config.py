@@ -65,6 +65,10 @@ class VeerConfig:
     search_backend: str = "bitmask"
     # environment
     semantics: str = D.BAG
+    # data plane executing operators when this config drives execution
+    # (sessions, reuse manager): "numpy" = reference, "jax" = vectorized;
+    # a pure performance choice — sink bytes are plane-invariant
+    plane: str = "numpy"
     cache_path: Optional[str] = None
     # LRU bound on the verdict/validity tables of the cache this config
     # creates (None = unbounded); applies to caches built from cache_path —
@@ -118,6 +122,13 @@ class VeerConfig:
             )
         if self.semantics not in (D.SET, D.BAG, D.ORDERED):
             raise ConfigError(f"bad semantics {self.semantics!r}")
+        from repro.engine.plane import available_planes  # late: avoid cycle
+
+        if self.plane not in available_planes():
+            raise ConfigError(
+                f"plane must be one of {available_planes()}, "
+                f"got {self.plane!r}"
+            )
         return self
 
     # -- construction --------------------------------------------------------

@@ -13,8 +13,20 @@ from repro.engine.store import (
     table_digest,
 )
 from repro.engine.ops_impl import register_udf, register_nonlinear, UDF_REGISTRY
+from repro.engine.plane import (
+    DataPlane,
+    PlaneError,
+    available_planes,
+    get_plane,
+    register_plane,
+)
 
 __all__ = [
+    "DataPlane",
+    "PlaneError",
+    "available_planes",
+    "get_plane",
+    "register_plane",
     "Table",
     "tables_equal",
     "tables_identical",

@@ -41,7 +41,6 @@ from typing import Dict, List, Mapping, Optional, Sequence, Set, Tuple
 
 from repro.core import dag as D
 from repro.core.dag import DataflowDAG
-from repro.engine.ops_impl import execute_op
 from repro.engine.store import MaterializationStore, table_digest
 from repro.engine.table import Table, tables_equal
 
@@ -65,6 +64,8 @@ class ExecStats:
     ops_executed: int = 0
     ops_reused: int = 0
     ops_skipped: int = 0
+    plane: str = "numpy"
+    ops_lowered: int = 0
     tables_served: int = 0
     store_writes: int = 0
     store_dedup_skipped: int = 0
@@ -94,12 +95,23 @@ class ExecutionPlan:
     again to serve) — each call returns a fresh ``ExecResult``.
     """
 
-    def __init__(self, dag: DataflowDAG, sources: Mapping[str, Table]):
+    def __init__(
+        self,
+        dag: DataflowDAG,
+        sources: Mapping[str, Table],
+        *,
+        plane: str = "numpy",
+    ):
         dag.validate()
         self.dag = dag
         self.sources: Dict[str, Table] = dict(sources)
         self.order: List[str] = dag.topo_order()
         self._digests: Optional[Dict[str, Optional[str]]] = None
+        # planes are a pure performance choice: digests/reuse keys hash the
+        # canonical numpy bytes, which every plane must reproduce exactly
+        from repro.engine.plane import get_plane
+
+        self.plane = get_plane(plane)
 
     # -- content digests ------------------------------------------------------
     @property
@@ -155,7 +167,7 @@ class ExecutionPlan:
         """
         t_start = time.perf_counter()
         keep_list = list(keep) if keep is not None else list(self.dag.sinks)
-        stats = ExecStats(ops_total=len(self.dag.ops))
+        stats = ExecStats(ops_total=len(self.dag.ops), plane=self.plane.name)
         seed = dict(seed) if seed else {}
         seed_keys = dict(seed_keys) if seed_keys else {}
         if (seed_keys or serve_from_store or materialize) and store is None:
@@ -215,7 +227,8 @@ class ExecutionPlan:
                     table = self.sources[op_id]
                 else:
                     ins = [results[l.src] for l in self.dag.in_links[op_id]]
-                    table = execute_op(op, ins)
+                    stats.ops_lowered += self.plane.lowers(op, ins)
+                    table = self.plane.execute_op(op, ins)
                 elapsed = time.perf_counter() - t0
                 stats.ops_executed += 1
                 if materialize and digests[op_id] is not None:
@@ -243,7 +256,7 @@ class ExecutionPlan:
 
 
 def execute(
-    dag: DataflowDAG, sources: Mapping[str, Table]
+    dag: DataflowDAG, sources: Mapping[str, Table], *, plane: str = "numpy"
 ) -> Dict[str, Table]:
     """Execute and return ``{sink_id: result table}``.
 
@@ -251,7 +264,7 @@ def execute(
     bindings raise — determinism demands fully-specified inputs.
     Intermediates are freed as their consumers drain (see ``ExecutionPlan``).
     """
-    return ExecutionPlan(dag, sources).run().results
+    return ExecutionPlan(dag, sources, plane=plane).run().results
 
 
 def sink_results_equal(

@@ -17,6 +17,7 @@ import numpy as np
 
 from repro.core import dag as D
 from repro.core.predicates import LinCmp, LinExpr, NonLinearAtom, Pred, StrEq
+from repro.engine.canon import column_codes, keyval as _keyval, run_bounds
 from repro.engine.table import Table
 
 # -- registries ---------------------------------------------------------------
@@ -173,6 +174,12 @@ def execute_op(op: D.Operator, inputs: List[Table]) -> Table:
                 if matched_vals.dtype == object:
                     pad = np.array([None] * len(unmatched), dtype=object)
                 else:
+                    # canonical padding rule, pinned by regression test and
+                    # shared by every plane: non-object right columns pad
+                    # with np.nan, which deliberately upcasts integer
+                    # columns to float64 (int64 has no NULL representation;
+                    # the float64 result is the canonical byte layout that
+                    # digests and stores key on)
                     pad = np.full(len(unmatched), np.nan)
                 matched_vals = np.concatenate([matched_vals, pad])
             out_cols[c] = matched_vals
@@ -286,25 +293,31 @@ def execute_op(op: D.Operator, inputs: List[Table]) -> Table:
 
 def _stable_desc_fix(sorted_vals: np.ndarray, order_: np.ndarray) -> np.ndarray:
     """After reversing an ascending stable sort, runs of equal keys are in
-    reversed input order; flip each run back to restore stability."""
+    reversed input order; flip each run back to restore stability.
+
+    Numeric columns use a vectorized run-boundary computation (rounded
+    equality is transitive and rounding is monotone, so equal keys are
+    adjacent and partition into ``column_codes`` runs — NaNs stay singleton
+    runs because ``nan != nan``); object columns keep the scalar walk.
+    """
     n = len(order_)
-    i = 0
-    out = order_.copy()
-    while i < n:
-        j = i
-        while j + 1 < n and _keyval(sorted_vals[j + 1]) == _keyval(sorted_vals[i]):
-            j += 1
-        out[i : j + 1] = order_[i : j + 1][::-1]
-        i = j + 1
-    return out
-
-
-def _keyval(v):
-    if isinstance(v, (np.floating, float)):
-        return round(float(v), 9)
-    if isinstance(v, np.integer):
-        return int(v)
-    return v
+    if n <= 1:
+        return order_.copy()
+    if sorted_vals.dtype == object:
+        i = 0
+        out = order_.copy()
+        while i < n:
+            j = i
+            while j + 1 < n and _keyval(sorted_vals[j + 1]) == _keyval(sorted_vals[i]):
+                j += 1
+            out[i : j + 1] = order_[i : j + 1][::-1]
+            i = j + 1
+        return out
+    codes = column_codes(sorted_vals, nan_distinct=True)
+    run_id, starts, ends = run_bounds(codes)
+    # position i inside run [s, e] maps to s + e - i: per-run reversal
+    mapped = starts[run_id] + ends[run_id] - np.arange(n)
+    return order_[mapped]
 
 
 def _col(vals: List) -> np.ndarray:

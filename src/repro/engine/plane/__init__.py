@@ -1,0 +1,71 @@
+"""Data-plane registry: named, memoized operator-execution backends.
+
+``available_planes()`` never imports heavy backends — registration is by
+*factory*, so listing (and validating config knobs against) the plane
+names works on hosts without jax.  ``get_plane`` instantiates lazily and
+memoizes: planes are stateless-per-run by contract (see ``base``), so one
+instance serves every session in the process.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, List
+
+from repro.engine.plane.base import DataPlane, PlaneError
+
+_REGISTRY: Dict[str, Callable[[], DataPlane]] = {}
+_INSTANCES: Dict[str, DataPlane] = {}
+
+
+def register_plane(name: str, factory: Callable[[], DataPlane]) -> None:
+    """Register (or replace) a plane factory under ``name``."""
+    _REGISTRY[name] = factory
+    _INSTANCES.pop(name, None)
+
+
+def available_planes() -> List[str]:
+    """Registered plane names (cheap: does not instantiate backends)."""
+    return sorted(_REGISTRY)
+
+
+def get_plane(name: str) -> DataPlane:
+    """The memoized plane instance for ``name``.
+
+    Raises ``PlaneError`` for unknown names and for planes whose backend
+    is unusable on this host (e.g. ``jax`` without jax installed).
+    """
+    inst = _INSTANCES.get(name)
+    if inst is not None:
+        return inst
+    factory = _REGISTRY.get(name)
+    if factory is None:
+        raise PlaneError(
+            f"unknown plane {name!r}; available: {', '.join(available_planes())}"
+        )
+    inst = factory()
+    _INSTANCES[name] = inst
+    return inst
+
+
+def _numpy_factory() -> DataPlane:
+    from repro.engine.plane.numpy_plane import NumpyPlane
+
+    return NumpyPlane()
+
+
+def _jax_factory() -> DataPlane:
+    from repro.engine.plane.jax_plane import JaxPlane
+
+    return JaxPlane()
+
+
+register_plane("numpy", _numpy_factory)
+register_plane("jax", _jax_factory)
+
+__all__ = [
+    "DataPlane",
+    "PlaneError",
+    "available_planes",
+    "get_plane",
+    "register_plane",
+]

@@ -370,6 +370,61 @@ def roofline_from_compiled(compiled, *, model_flops: float, n_chips: int) -> Roo
     )
 
 
+def analyze_jitted(fn, *args) -> HLOAnalysis:
+    """Trip-count-corrected HLO analysis of ``jax.jit(fn)`` on ``args``.
+
+    jax is imported lazily — this module stays importable (and every other
+    entry point usable) on hosts without jax.
+    """
+    import jax
+
+    compiled = jax.jit(fn).lower(*args).compile()
+    return analyze_hlo(compiled.as_text())
+
+
+def kernel_roofline(fn, *args) -> Roofline:
+    """Single-chip roofline for one jitted kernel (data-plane reporting).
+
+    The fused-program traffic model (module docstring) counts only interior
+    data-movement ops, which reports **zero** bytes for a pure elementwise
+    kernel — but a standalone kernel must still stream its operands and
+    results through HBM, so entry I/O bytes are applied as a floor.
+
+    ``model_flops`` is set to the HLO dot-flops — relational kernels have
+    no model-level flop count of their own, so ``useful_flops_ratio`` is
+    1.0 by construction and only the time terms / bottleneck matter.
+    """
+    import math
+
+    import jax
+
+    an = analyze_jitted(fn, *args)
+    leaves = list(args) + list(jax.tree_util.tree_leaves(jax.eval_shape(fn, *args)))
+    io_bytes = sum(
+        math.prod(x.shape) * x.dtype.itemsize for x in leaves
+    )
+    return Roofline(
+        flops=an.flops,
+        hbm_bytes=max(an.traffic_bytes, float(io_bytes)),
+        collective_bytes=an.total_collective_bytes,
+        model_flops=an.flops,
+        n_chips=1,
+        collective_detail=an.collective_bytes,
+        collective_counts=an.collective_counts,
+    )
+
+
+def is_bandwidth_bound(fn, *args) -> bool:
+    """True when the memory term dominates the compute term for ``fn``.
+
+    Used by ``kernels/relational.py`` to gate the Pallas lowering of the
+    fused filter/project kernels: elementwise relational bodies carry zero
+    dot-flops, so they are bandwidth-bound whenever they move any bytes.
+    """
+    r = kernel_roofline(fn, *args)
+    return r.t_memory >= r.t_compute
+
+
 def train_model_flops(n_active_params: float, tokens: float) -> float:
     return 6.0 * n_active_params * tokens
 

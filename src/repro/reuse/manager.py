@@ -129,6 +129,7 @@ class ReuseManager:
         self.verdict_cache = verdict_cache
         self.veer = veer
         self.semantics = semantics
+        self.plane = config.plane if config is not None else "numpy"
         self._registry = registry
         self.versions: List[_Version] = []
         self.stats = ReuseStats()
@@ -142,7 +143,7 @@ class ReuseManager:
         """Execute (or reuse) a pipeline version; returns sink tables."""
         self.stats.submissions += 1
         dag.validate()
-        plan = ExecutionPlan(dag, sources)
+        plan = ExecutionPlan(dag, sources, plane=self.plane)
         digests = plan.digests
         sinks = dag.sinks
         results: Dict[str, Table] = {}

@@ -301,6 +301,9 @@ class VersionChainSession:
         if semantics is None:
             semantics = config.semantics if config is not None else D.BAG
         self.semantics = semantics
+        # data plane for execute-with-reuse submits; plane-invariant bytes
+        # keep store keys / frontier digests / certificates unchanged
+        self.plane = config.plane if config is not None else "numpy"
         self.keep_certificates = keep_certificates
         self.pair_cache = pair_cache
         self.store = materialization_store
@@ -347,7 +350,7 @@ class VersionChainSession:
         self.version_count += 1
         plan: Optional[ExecutionPlan] = None
         if sources is not None:
-            plan = ExecutionPlan(version, sources)
+            plan = ExecutionPlan(version, sources, plane=self.plane)
         prev_plan, self._prev_plan = self._prev_plan, plan
 
         if prev is None:

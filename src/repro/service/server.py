@@ -20,6 +20,11 @@ windowed search.  The design (see docs/ARCHITECTURE.md, concurrency model):
   * every verdict keeps its replayable ``Certificate`` — concurrency never
     downgrades auditable evidence to trust-me.
 
+Execute-with-reuse sessions inherit their data plane from the shared
+``VeerConfig`` (``plane="jax"`` runs every client's chains on the
+vectorized plane; see docs/DATA_PLANE.md) — planes are byte-identical by
+contract, so this changes throughput, never results.
+
 Typical use::
 
     from repro.api import VeerConfig

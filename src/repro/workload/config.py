@@ -77,6 +77,10 @@ class WorkloadConfig:
     # search budget of the replayed verifier (semantic edits are UNK-heavy;
     # a small budget keeps their exhausted searches cheap)
     max_decompositions: int = 300
+    # data plane used by the replayed sessions' execute-with-reuse path;
+    # the differential oracle always executes on the reference plane, so a
+    # non-default plane turns every replay into a cross-plane identity check
+    plane: str = "numpy"
 
     # -- convenience ---------------------------------------------------------
     def replace(self, **changes: Any) -> "WorkloadConfig":
@@ -129,6 +133,13 @@ class WorkloadConfig:
             raise WorkloadConfigError(
                 f"edit_mix weights must be >= 0 with a positive sum: "
                 f"{self.edit_mix!r}"
+            )
+        from repro.engine.plane import available_planes  # late: avoids cycles
+
+        if self.plane not in available_planes():
+            raise WorkloadConfigError(
+                f"plane must be one of {available_planes()}, "
+                f"got {self.plane!r}"
             )
         return self
 

@@ -169,7 +169,9 @@ class ReplayResult:
 
 def default_veer_config(config: WorkloadConfig) -> VeerConfig:
     return VeerConfig(
-        evs=REPLAY_EVS, max_decompositions=config.max_decompositions
+        evs=REPLAY_EVS,
+        max_decompositions=config.max_decompositions,
+        plane=config.plane,
     )
 
 
