@@ -112,11 +112,20 @@ def main() -> None:
         f"replay {r['replayed']}/{r['replayed'] + r['replay_failures']} ok, "
         f"{r['verdict_mismatches']} verdict mismatches"
     )
+    fr = service_bench.run_fleet(clients=2, fleet=2, n_versions=6,
+                                 shared_tier="remote")
+    print(
+        f"fleet 1 vs {fr['fleet']} processes (remote tier): "
+        f"{fr['fleet_scaling']:.2f}x scaling, "
+        f"{fr['verdict_mismatches']} mismatches, "
+        f"{fr['replay_failures']} replay failures"
+    )
     csv_lines.append(_csv(
         "service_bench", time.perf_counter() - t0,
         f"speedup={r['speedup']:.1f}x pairs_per_sec={r['svc_pairs_per_sec']:.0f} "
         f"ev_calls_saved={r['ev_calls_saved_pct']:.0f}% "
-        f"replay_ok={r['replay_ok_pct']:.0f}%",
+        f"replay_ok={r['replay_ok_pct']:.0f}% "
+        f"fleet_scaling={fr['fleet_scaling']:.2f}x",
     ))
 
     print("\n== Edit-session stress: generated traffic + differential oracles ==")

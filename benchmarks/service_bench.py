@@ -12,26 +12,47 @@ and measures pairs/sec two ways:
     ``VerdictCache``: the first client to pay for a window verdict answers
     it for every other client.
 
-The run fails unless the service reproduces the baseline verdicts exactly
-and every decided pair's certificate replays green — concurrency must never
-trade soundness or auditability for throughput.
+``--fleet N`` additionally shards the same traffic across N worker
+*processes* (``VerificationFleet``) — 1 process vs N over an intentionally
+small per-shard queue, so throughput is measured *under backpressure* —
+and reports the fleet scaling ratio, shared-tier cache hit-rates, and
+p50/p99 pair latency.  ``--tier remote`` points every worker at one
+file-backed ``FileTier`` (content-addressed payloads, lease single-flight).
+
+Every mode fails unless it reproduces the baseline verdicts exactly and
+every decided pair's certificate replays green — concurrency must never
+trade soundness or auditability for throughput.  ``--json`` writes the
+summary in the ``BENCH_session.json`` format family; ``--smoke`` guards
+against the committed ``benchmarks/BENCH_service.json`` baseline (>30%
+pairs/sec regression fails, with the machine-independent speedup and
+fleet-scaling ratios as fallback).
 
     PYTHONPATH=src python benchmarks/service_bench.py \
-        [--clients N] [--workers M] [--versions V] [--smoke]
+        [--clients N] [--workers M] [--versions V] [--smoke] \
+        [--fleet N] [--tier local|remote] [--json PATH]
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import os
+import pathlib
+import shutil
 import sys
+import tempfile
 import time
 from typing import Dict, List, Optional
 
 sys.path.insert(0, "src")
 
 from repro.api import VeerConfig
-from repro.service import VerificationService
+from repro.service import VerificationFleet, VerificationService
 from repro.service.synthetic import make_chain
+
+BASELINE_PATH = pathlib.Path(__file__).resolve().parent / "BENCH_service.json"
+# CI guard: fail when pairs/sec drops more than this vs the committed baseline
+REGRESSION_TOLERANCE = 0.30
 
 
 def _config(use_jaxpr: bool, max_workers: int = 1) -> VeerConfig:
@@ -113,6 +134,167 @@ def run(
     }
 
 
+def _pct(xs: List[float], q: float) -> float:
+    if not xs:
+        return 0.0
+    xs = sorted(xs)
+    return xs[min(len(xs) - 1, int(round(q * (len(xs) - 1))))]
+
+
+def _hit_rate(stats: Dict[str, object]) -> float:
+    hits = stats.get("hits", 0) or 0
+    misses = stats.get("misses", 0) or 0
+    return 100.0 * hits / max(1, hits + misses)
+
+
+def run_fleet(
+    clients: int = 4,
+    fleet: int = 4,
+    n_versions: int = 8,
+    shared_tier: str = "local",
+    queue_size: int = 4,
+    use_jaxpr: bool = False,
+) -> Dict[str, object]:
+    """1 process vs ``fleet`` processes over the same chain traffic.
+
+    The per-shard queue is kept small (``queue_size``) so submission runs
+    under real backpressure — the latencies below include queueing.  The
+    1-process run doubles as the correctness reference: every scale must
+    produce byte-identical (verdict, certificate JSON) traces, and every
+    decided pair's certificate must replay green.
+    """
+    chain = make_chain(n_versions)
+    total_pairs = clients * (n_versions - 1)
+    scales = sorted({1, fleet})
+    per_scale: Dict[int, Dict[str, object]] = {}
+    reference: Optional[Dict[str, list]] = None
+    mismatches = 0
+    replay_failures = 0
+
+    for n in scales:
+        tier_dir = (
+            tempfile.mkdtemp(prefix="veer-bench-tier-")
+            if shared_tier == "remote"
+            else None
+        )
+        try:
+            cfg = _config(use_jaxpr).replace(
+                shared_tier=shared_tier, tier_dir=tier_dir
+            )
+            latencies: List[float] = []
+            futures: Dict[str, list] = {f"client-{c}": [] for c in range(clients)}
+            t0 = time.perf_counter()
+            with VerificationFleet(n, config=cfg, queue_size=queue_size) as flt:
+                for v in chain:  # round-robin arrivals, like real traffic
+                    for c in range(clients):
+                        ts = time.perf_counter()
+                        fut = flt.submit(f"client-{c}", v)  # blocks when full
+                        fut.add_done_callback(
+                            lambda _f, _ts=ts: latencies.append(
+                                time.perf_counter() - _ts
+                            )
+                        )
+                        futures[f"client-{c}"].append(fut)
+                report = flt.drain()
+            wall = time.perf_counter() - t0
+
+            sig: Dict[str, list] = {}
+            for cid, futs in sorted(futures.items()):
+                pair_reports = [f.result() for f in futs][1:]
+                sig[cid] = [
+                    (
+                        p.verdict,
+                        p.certificate.to_json() if p.certificate else None,
+                    )
+                    for p in pair_reports
+                ]
+                for p in pair_reports:
+                    if p.verdict is None:
+                        continue
+                    if p.certificate is None or not p.certificate.replay().ok:
+                        replay_failures += 1
+            if reference is None:
+                reference = sig
+            elif sig != reference:
+                mismatches += 1
+
+            pair_stats = report.pair_cache_stats
+            per_scale[n] = {
+                "workers": n,
+                "wall_s": wall,
+                "pairs_per_sec": total_pairs / max(wall, 1e-9),
+                "p50_latency_ms": _pct(latencies, 0.50) * 1e3,
+                "p99_latency_ms": _pct(latencies, 0.99) * 1e3,
+                "verdict_hit_rate_pct": _hit_rate(report.cache_stats),
+                "pair_hit_rate_pct": _hit_rate(pair_stats),
+                "pair_tier_hits": pair_stats.get("tier_hits", 0),
+                "recoveries": report.recoveries,
+                "errors": len(report.errors),
+                "tier_stats": dict(report.tier_stats),
+            }
+        finally:
+            if tier_dir is not None:
+                shutil.rmtree(tier_dir, ignore_errors=True)
+
+    one = per_scale[scales[0]]["pairs_per_sec"]
+    top = per_scale[scales[-1]]["pairs_per_sec"]
+    return {
+        "clients": clients,
+        "fleet": fleet,
+        "pairs": total_pairs,
+        "shared_tier": shared_tier,
+        "queue_size": queue_size,
+        "cpu_count": os.cpu_count() or 1,
+        "scales": per_scale,
+        "fleet_pairs_per_sec": top,
+        "fleet_scaling": top / max(one, 1e-9),
+        "verdict_mismatches": mismatches,
+        "replay_failures": replay_failures,
+        "errors": sum(int(s["errors"]) for s in per_scale.values()),
+    }
+
+
+def check_regression(headline, baseline_path: pathlib.Path = BASELINE_PATH) -> bool:
+    """CI guard: service pairs/sec vs the committed baseline, falling back
+    to the machine-independent ratios (service/sequential speedup, then the
+    fleet scaling ratio) when absolute throughput is hardware-skewed —
+    the same scheme as ``session_bench.check_regression``."""
+    if not baseline_path.exists():
+        print(f"no committed baseline at {baseline_path}; skipping guard")
+        return True
+    baseline = json.loads(baseline_path.read_text())["headline"]
+    floor = baseline["pairs_per_sec"] * (1.0 - REGRESSION_TOLERANCE)
+    rate = headline["pairs_per_sec"]
+    print(
+        f"regression guard: {rate:.1f} pairs/s vs committed "
+        f"{baseline['pairs_per_sec']:.1f} (floor {floor:.1f})"
+    )
+    if rate >= floor:
+        return True
+    ok_ratio = False
+    for key, label in (("speedup", "service/sequential speedup"),
+                       ("fleet_scaling", "fleet scaling ratio")):
+        if headline.get(key) is None or baseline.get(key) is None:
+            continue
+        ratio_floor = baseline[key] * (1.0 - REGRESSION_TOLERANCE)
+        print(
+            f"  below absolute floor; machine-independent {label}: "
+            f"{headline[key]:.2f}x vs committed {baseline[key]:.2f}x "
+            f"(floor {ratio_floor:.2f}x)"
+        )
+        if headline[key] >= ratio_floor:
+            print(f"  {label} held — slower runner, not a service regression")
+            ok_ratio = True
+            break
+    if ok_ratio:
+        return True
+    print(
+        f"FAIL: pairs/sec AND the fallback ratios regressed "
+        f">{REGRESSION_TOLERANCE:.0%} vs the committed baseline"
+    )
+    return False
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--clients", type=int, default=4)
@@ -128,9 +310,38 @@ def main(argv=None) -> int:
         default=1,
         help="intra-pair window-dispatch threads per verifier (VeerConfig.max_workers)",
     )
+    ap.add_argument(
+        "--fleet",
+        type=int,
+        default=0,
+        metavar="N",
+        help="also shard the traffic across N worker processes "
+             "(VerificationFleet) and report the 1-vs-N scaling ratio",
+    )
+    ap.add_argument(
+        "--tier",
+        choices=("local", "remote"),
+        default="local",
+        help="shared cache tier the fleet workers attach (remote = "
+             "file-backed FileTier in a temp dir)",
+    )
+    ap.add_argument(
+        "--queue-size",
+        type=int,
+        default=4,
+        help="per-shard fleet queue bound; small = measure under backpressure",
+    )
+    ap.add_argument(
+        "--json",
+        metavar="PATH",
+        help="write headline + rows as JSON (the committed baseline is "
+             "benchmarks/BENCH_service.json)",
+    )
     args = ap.parse_args(argv)
     if args.clients < 1 or args.workers < 1:
         ap.error("--clients and --workers must be positive")
+    if args.fleet < 0 or args.queue_size < 1:
+        ap.error("--fleet must be >= 0 and --queue-size positive")
     n = args.versions or (6 if args.smoke else 12)
     if n < 2:
         ap.error("--versions must be at least 2")
@@ -156,12 +367,81 @@ def main(argv=None) -> int:
         f"{r['replayed']}/{r['replayed'] + r['replay_failures']} ok"
     )
 
+    fr = None
+    if args.fleet:
+        fr = run_fleet(
+            args.clients, args.fleet, n,
+            shared_tier=args.tier, queue_size=args.queue_size,
+            use_jaxpr=args.jaxpr,
+        )
+        print(
+            f"== fleet: 1 vs {fr['fleet']} processes, {args.tier} tier, "
+            f"queue={fr['queue_size']} (backpressure) =="
+        )
+        for scale, row in sorted(fr["scales"].items()):
+            print(
+                f"  {scale} proc: {row['pairs_per_sec']:7.1f} pairs/s  "
+                f"p50 {row['p50_latency_ms']:6.1f} ms  "
+                f"p99 {row['p99_latency_ms']:6.1f} ms  "
+                f"verdict-cache {row['verdict_hit_rate_pct']:.0f}%  "
+                f"pair-cache {row['pair_hit_rate_pct']:.0f}%  "
+                f"recoveries {row['recoveries']}"
+            )
+        print(
+            f"fleet scaling {fr['fleet_scaling']:.2f}x on "
+            f"{fr['cpu_count']} cores, {fr['verdict_mismatches']} "
+            f"cross-scale verdict/certificate mismatches, "
+            f"{fr['replay_failures']} replay failures"
+        )
+
+    headline = {
+        "clients": r["clients"],
+        "workers": r["workers"],
+        "pairs": r["pairs"],
+        "pairs_per_sec": r["svc_pairs_per_sec"],
+        "speedup": r["speedup"],
+        "ev_calls_saved_pct": r["ev_calls_saved_pct"],
+        "replay_ok_pct": r["replay_ok_pct"],
+        "fleet_workers": fr["fleet"] if fr else None,
+        "fleet_tier": fr["shared_tier"] if fr else None,
+        "fleet_pairs_per_sec": fr["fleet_pairs_per_sec"] if fr else None,
+        "fleet_scaling": fr["fleet_scaling"] if fr else None,
+        "fleet_p50_latency_ms": (
+            fr["scales"][fr["fleet"]]["p50_latency_ms"]
+            if fr and fr["fleet"] in fr["scales"] else None
+        ),
+        "fleet_p99_latency_ms": (
+            fr["scales"][fr["fleet"]]["p99_latency_ms"]
+            if fr and fr["fleet"] in fr["scales"] else None
+        ),
+        "cpu_count": os.cpu_count() or 1,
+    }
+    if args.json:
+        payload = {
+            "name": "service",
+            "smoke": bool(args.smoke),
+            "config": {
+                "clients": args.clients,
+                "workers": args.workers,
+                "versions": n,
+                "fleet": args.fleet,
+                "tier": args.tier,
+                "queue_size": args.queue_size,
+            },
+            "headline": headline,
+            "rows": {"service": {k: v for k, v in r.items() if k != "report"},
+                     "fleet": fr},
+        }
+        pathlib.Path(args.json).write_text(json.dumps(payload, indent=2) + "\n")
+        print(f"wrote {args.json}")
+
     # scaffold CSV contract (see benchmarks/run.py)
     print(
         f"service_bench,{r['svc_wall'] * 1e6 / max(1, r['pairs']):.1f},"
         f"speedup={r['speedup']:.1f}x"
         f"_saved={r['ev_calls_saved_pct']:.0f}%"
         f"_replay={r['replay_ok_pct']:.0f}%"
+        + (f"_fleetx{fr['fleet_scaling']:.2f}" if fr else "")
     )
 
     ok = (
@@ -170,9 +450,28 @@ def main(argv=None) -> int:
         and r["errors"] == 0
         and r["svc_ev_calls"] < r["base_ev_calls"]
     )
+    if fr is not None:
+        ok = (
+            ok
+            and fr["verdict_mismatches"] == 0
+            and fr["replay_failures"] == 0
+            and fr["errors"] == 0
+        )
+        # the scale-out acceptance gate only binds where the hardware can
+        # express it: a 1-core container cannot show process parallelism
+        if args.fleet >= 4 and (os.cpu_count() or 1) >= 4:
+            if fr["fleet_scaling"] < 3.0:
+                print(
+                    f"FAILED: {args.fleet}-process fleet scaled only "
+                    f"{fr['fleet_scaling']:.2f}x (< 3x) on "
+                    f"{os.cpu_count()} cores"
+                )
+                ok = False
     if not ok:
         print("FAILED: service diverged from the sequential baseline "
               "(verdicts, certificates, or EV-call savings)")
+        return 1
+    if args.smoke and not check_regression(headline):
         return 1
     return 0
 

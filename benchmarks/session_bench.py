@@ -214,6 +214,15 @@ def main() -> None:
                          "execution and add the bit-identity oracle")
     ap.add_argument("--no-baseline", action="store_true",
                     help="skip the sequential no-sharing baseline")
+    ap.add_argument("--fleet", type=int, default=0, metavar="N",
+                    help="replay through a VerificationFleet of N worker "
+                         "processes instead of the threaded service (the "
+                         "differential oracles and certificate replay audit "
+                         "stay on; see docs/SCALE_OUT.md)")
+    ap.add_argument("--shared-tier", choices=("local", "remote"),
+                    default="local",
+                    help="fleet cache tier (remote = file-backed FileTier "
+                         "in a temp dir)")
     ap.add_argument("--plane", default="numpy",
                     help="data plane for the replayed sessions (numpy|jax); "
                          "the differential oracle stays on the reference "
@@ -229,7 +238,8 @@ def main() -> None:
         config = extended_config(args.seed)
     else:
         config = DEFAULT_CONFIG.replace(seed=args.seed)
-    config = config.replace(plane=args.plane).validate()
+    config = config.replace(plane=args.plane, fleet=args.fleet,
+                            shared_tier=args.shared_tier).validate()
 
     result, headline, rows = run(
         config,
@@ -254,9 +264,12 @@ def main() -> None:
     if args.json:
         pathlib.Path(args.json).write_text(json.dumps(payload, indent=2) + "\n")
         print(f"wrote {args.json}")
-    if args.smoke and args.plane == "numpy" and not check_regression(headline):
-        # the committed baseline is a numpy-plane run; other planes smoke
-        # for identity (the oracle above), not for this rate guard
+    if (args.smoke and args.plane == "numpy" and not args.fleet
+            and not check_regression(headline)):
+        # the committed baseline is a numpy-plane thread-service run; other
+        # planes and the process fleet smoke for identity (the oracles
+        # above), not for this rate guard — the fleet's own guard lives in
+        # service_bench / BENCH_service.json
         raise SystemExit(1)
 
 

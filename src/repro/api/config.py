@@ -74,6 +74,14 @@ class VeerConfig:
     # creates (None = unbounded); applies to caches built from cache_path —
     # an explicitly passed cache keeps its own bound
     cache_max_entries: Optional[int] = None
+    # shared second-level cache tier behind the in-process caches:
+    # "local" (in-process dicts — single-process behavior, the default) or
+    # "remote" (a FileTier directory shared by every worker process of a
+    # VerificationFleet; see repro.service.remote / docs/SCALE_OUT.md)
+    shared_tier: str = "local"
+    tier_dir: Optional[str] = None          # required when shared_tier="remote"
+    tier_ttl_seconds: Optional[float] = None    # remote entry TTL (None = keep)
+    tier_byte_budget: Optional[int] = None      # remote payload bound (bytes)
 
     # -- presets -------------------------------------------------------------
     @staticmethod
@@ -122,6 +130,28 @@ class VeerConfig:
             )
         if self.semantics not in (D.SET, D.BAG, D.ORDERED):
             raise ConfigError(f"bad semantics {self.semantics!r}")
+        if self.shared_tier not in ("local", "remote"):
+            raise ConfigError(
+                f"shared_tier must be 'local' or 'remote', "
+                f"got {self.shared_tier!r}"
+            )
+        if self.shared_tier == "remote" and self.tier_dir is None:
+            raise ConfigError("shared_tier='remote' requires tier_dir")
+        if self.tier_ttl_seconds is not None and not (
+            isinstance(self.tier_ttl_seconds, (int, float))
+            and self.tier_ttl_seconds > 0
+        ):
+            raise ConfigError(
+                f"tier_ttl_seconds must be positive or None, "
+                f"got {self.tier_ttl_seconds!r}"
+            )
+        if self.tier_byte_budget is not None and not (
+            isinstance(self.tier_byte_budget, int) and self.tier_byte_budget > 0
+        ):
+            raise ConfigError(
+                f"tier_byte_budget must be a positive int or None, "
+                f"got {self.tier_byte_budget!r}"
+            )
         from repro.engine.plane import available_planes  # late: avoid cycle
 
         if self.plane not in available_planes():

@@ -2,7 +2,9 @@
 
 ``VersionChainSession`` serves one client's version chain;
 ``VerificationService`` multiplexes many concurrent sessions over one
-shared, thread-safe verdict cache (see ``repro.service.server``).
+shared, thread-safe verdict cache (see ``repro.service.server``);
+``VerificationFleet`` shards clients across worker *processes* over a
+shared cache tier (``repro.service.fleet`` / ``repro.service.remote``).
 """
 
 from repro.service.chain import (
@@ -10,6 +12,13 @@ from repro.service.chain import (
     PairReport,
     VersionChainSession,
     verify_chain,
+)
+from repro.service.fleet import (
+    ConsistentHashRing,
+    FleetReport,
+    FleetWorkerLost,
+    VerificationFleet,
+    shard_key,
 )
 from repro.service.pair_cache import PairEntry, PairVerdictCache
 from repro.service.server import (
@@ -22,14 +31,19 @@ from repro.core.ev.cache import VerdictCache
 
 __all__ = [
     "ChainReport",
+    "ConsistentHashRing",
+    "FleetReport",
+    "FleetWorkerLost",
     "PairEntry",
     "PairReport",
     "PairVerdictCache",
     "ServiceBusy",
     "ServiceClosed",
     "ServiceReport",
+    "VerificationFleet",
     "VerificationService",
     "VersionChainSession",
     "verify_chain",
     "VerdictCache",
+    "shard_key",
 ]

@@ -452,7 +452,9 @@ class VersionChainSession:
             verdict, stats, certificate = compute()
             return verdict, stats, certificate, False
         key = self.pair_cache.make_key(prev, version, self.semantics, mapping)
-        return self.pair_cache.compute_or_reuse(key, compute)
+        return self.pair_cache.compute_or_reuse(
+            key, compute, pair=(prev, version)
+        )
 
     def report(self) -> ChainReport:
         return self._report

@@ -123,6 +123,8 @@ class PairVerdictCache:
         self,
         key: PairKey,
         compute: Callable[[], Tuple[Optional[bool], VeerStats, Optional[Certificate]]],
+        *,
+        pair: Optional[Tuple[DataflowDAG, DataflowDAG]] = None,
     ) -> Tuple[Optional[bool], VeerStats, Optional[Certificate], bool]:
         """The whole single-flight protocol in one place (both the chain
         session and the service's one-shot path go through here, so the
@@ -133,7 +135,15 @@ class PairVerdictCache:
         ``(verdict, stats, certificate)``.  Returns the same triple plus
         ``reused``; a reused result carries synthesized stats accounting
         only the avoided work.
+
+        ``pair`` is the ``(P, Q)`` the key was made from.  This in-memory
+        cache has no use for it (digest equality already binds entries to
+        content-identical pairs); the tier-backed subclass
+        (``repro.service.remote.adapters.TieredPairCache``) requires it to
+        replay certificates before serving hits that crossed a process
+        boundary.
         """
+        del pair  # entries here were written by this process: trusted
         entry, _owner = self.acquire(key)
         if entry is not None:
             stats = VeerStats(

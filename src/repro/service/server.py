@@ -57,6 +57,8 @@ from repro.core.edits import EditMapping
 from repro.core.ev.cache import VerdictCache
 from repro.service.chain import ChainReport, PairReport, VersionChainSession
 from repro.service.pair_cache import PairVerdictCache
+from repro.service.remote.adapters import TieredPairCache, TieredVerdictCache
+from repro.service.remote.tier import make_tier
 
 
 class ServiceClosed(RuntimeError):
@@ -226,15 +228,38 @@ class VerificationService:
             raise ValueError("queue_size must be positive")
         self.config = config if config is not None else VeerConfig()
         self.registry = registry
-        self.cache = (
-            cache
-            if cache is not None
-            else VerdictCache(
+        # config.shared_tier="remote" attaches the FileTier as a second
+        # cache level (same tier a VerificationFleet's workers mount, so a
+        # service and a fleet can share one directory of verdicts/tables);
+        # explicitly passed caches always win over tier construction
+        tier = None
+        if self.config.shared_tier == "remote":
+            tier = make_tier(
+                self.config.shared_tier,
+                self.config.tier_dir,
+                ttl_seconds=self.config.tier_ttl_seconds,
+                byte_budget=self.config.tier_byte_budget,
+            )
+        self.tier = tier
+        if cache is not None:
+            self.cache = cache
+        elif tier is not None:
+            self.cache = TieredVerdictCache(
+                tier,
                 self.config.cache_path,
                 max_entries=self.config.cache_max_entries,
             )
-        )
-        self.pair_cache = PairVerdictCache() if share_pair_verdicts else None
+        else:
+            self.cache = VerdictCache(
+                self.config.cache_path,
+                max_entries=self.config.cache_max_entries,
+            )
+        if not share_pair_verdicts:
+            self.pair_cache = None
+        elif tier is not None:
+            self.pair_cache = TieredPairCache(tier, registry=registry)
+        else:
+            self.pair_cache = PairVerdictCache()
         self.materialization_store = materialization_store
         self.keep_certificates = keep_certificates
         self._queue: "queue.Queue[object]" = queue.Queue(maxsize=queue_size)
@@ -524,7 +549,7 @@ class VerificationService:
 
         key = self.pair_cache.make_key(P, Q, self.config.semantics, mapping)
         verdict, stats, certificate, reused = self.pair_cache.compute_or_reuse(
-            key, compute
+            key, compute, pair=(P, Q)
         )
         return VerificationResult(
             verdict=verdict,

@@ -81,6 +81,13 @@ class WorkloadConfig:
     # the differential oracle always executes on the reference plane, so a
     # non-default plane turns every replay into a cross-plane identity check
     plane: str = "numpy"
+    # scale-out: 0 = single-process VerificationService (today's default);
+    # N > 0 replays through a VerificationFleet of N worker processes
+    fleet: int = 0
+    # cache tier the replayed service/fleet shares: "local" (in-process) or
+    # "remote" (a FileTier directory; replay creates a temporary one unless
+    # the driver is given tier_dir explicitly).  See docs/SCALE_OUT.md.
+    shared_tier: str = "local"
 
     # -- convenience ---------------------------------------------------------
     def replace(self, **changes: Any) -> "WorkloadConfig":
@@ -110,6 +117,15 @@ class WorkloadConfig:
             raise WorkloadConfigError("chain_length must be at least 2")
         if not isinstance(self.qps, (int, float)) or self.qps < 0:
             raise WorkloadConfigError(f"qps must be >= 0, got {self.qps!r}")
+        if not isinstance(self.fleet, int) or self.fleet < 0:
+            raise WorkloadConfigError(
+                f"fleet must be a non-negative int, got {self.fleet!r}"
+            )
+        if self.shared_tier not in ("local", "remote"):
+            raise WorkloadConfigError(
+                f"shared_tier must be 'local' or 'remote', "
+                f"got {self.shared_tier!r}"
+            )
         if not self.workloads:
             raise WorkloadConfigError("config selects no workloads")
         unknown = [w for w in self.workloads if w not in WORKLOADS]

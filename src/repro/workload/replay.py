@@ -31,6 +31,8 @@ drains the service and reports everything it found.
 
 from __future__ import annotations
 
+import shutil
+import tempfile
 import threading
 import time
 from dataclasses import dataclass, field
@@ -45,6 +47,7 @@ from repro.engine.executor import execute
 from repro.engine.store import InMemoryMaterializationStore
 from repro.engine.table import Table, tables_identical
 from repro.service import ServiceBusy, VerificationService
+from repro.service.fleet import VerificationFleet
 from repro.workload.config import WorkloadConfig
 from repro.workload.corpus import WindowExample, windows_from_certificate
 from repro.workload.generator import EXPECTED_EQ, EditSession
@@ -195,8 +198,22 @@ def replay_sessions(
     shared in-memory materialization store and adds the bit-identity
     oracle.  A full ``ServiceBusy`` rejection is counted and the version is
     resubmitted blocking — a replayed chain never drops a version.
+
+    ``config.fleet > 0`` replays through a ``VerificationFleet`` of that
+    many worker *processes* instead of the threaded service — same submit
+    loop, same oracles (the fleet front mirrors the service surface).
+    ``config.shared_tier == "remote"`` attaches a ``FileTier`` shared
+    cache tier (in a temporary directory unless ``veer_config`` already
+    pins ``tier_dir``); with the default ``"local"`` nothing crosses a
+    process boundary except jobs and reports.
     """
     veer_config = veer_config or default_veer_config(config)
+    tmp_tier_dir: Optional[str] = None
+    if config.shared_tier == "remote" and veer_config.shared_tier != "remote":
+        tmp_tier_dir = tempfile.mkdtemp(prefix="veer-tier-")
+        veer_config = veer_config.replace(
+            shared_tier="remote", tier_dir=tmp_tier_dir
+        )
     result = ReplayResult(config=config)
     store = InMemoryMaterializationStore() if exec_reuse else None
     lat_lock = threading.Lock()
@@ -204,45 +221,62 @@ def replay_sessions(
     futures: Dict[str, List] = {s.session_id: [] for s in sessions}
     t_run = time.perf_counter()
     next_slot = t_run
-    with VerificationService(
-        config=veer_config,
-        registry=registry,
-        workers=workers or config.clients,
-        queue_size=queue_size,
-        materialization_store=store,
-    ) as svc:
-        # round-robin across sessions: every client has work in flight
-        for k in range(max(len(s.versions) for s in sessions)):
-            for s in sessions:
-                if k >= len(s.versions):
-                    continue
-                if config.qps > 0:
-                    next_slot += 1.0 / config.qps
-                    delay = next_slot - time.perf_counter()
-                    if delay > 0:
-                        time.sleep(delay)
-                mapping = s.pairs[k - 1].mapping if k > 0 else None
-                kw = {"sources": s.sources} if exec_reuse else {}
-                t0 = time.perf_counter()
-                try:
-                    fut = svc.submit(
-                        s.session_id, s.versions[k], mapping,
-                        block=False, **kw,
-                    )
-                except ServiceBusy:
-                    result.busy_rejections += 1
-                    fut = svc.submit(s.session_id, s.versions[k], mapping, **kw)
-                if k > 0:
-                    def _record(f, t0=t0):
-                        with lat_lock:
-                            result.latencies.append(time.perf_counter() - t0)
-                    fut.add_done_callback(_record)
-                futures[s.session_id].append(fut)
-        report = svc.drain()
-        result.run_wall = time.perf_counter() - t_run
-        result.errors = list(report.errors)
-        result.cache_stats = dict(report.cache_stats)
-        result.pair_cache_stats = dict(report.pair_cache_stats)
+    if config.fleet > 0:
+        backend = VerificationFleet(
+            config.fleet,
+            config=veer_config,
+            registry=registry,
+            queue_size=queue_size,
+        )
+    else:
+        backend = VerificationService(
+            config=veer_config,
+            registry=registry,
+            workers=workers or config.clients,
+            queue_size=queue_size,
+            materialization_store=store,
+        )
+    try:
+        with backend as svc:
+            # round-robin across sessions: every client has work in flight
+            for k in range(max(len(s.versions) for s in sessions)):
+                for s in sessions:
+                    if k >= len(s.versions):
+                        continue
+                    if config.qps > 0:
+                        next_slot += 1.0 / config.qps
+                        delay = next_slot - time.perf_counter()
+                        if delay > 0:
+                            time.sleep(delay)
+                    mapping = s.pairs[k - 1].mapping if k > 0 else None
+                    kw = {"sources": s.sources} if exec_reuse else {}
+                    t0 = time.perf_counter()
+                    try:
+                        fut = svc.submit(
+                            s.session_id, s.versions[k], mapping,
+                            block=False, **kw,
+                        )
+                    except ServiceBusy:
+                        result.busy_rejections += 1
+                        fut = svc.submit(
+                            s.session_id, s.versions[k], mapping, **kw
+                        )
+                    if k > 0:
+                        def _record(f, t0=t0):
+                            with lat_lock:
+                                result.latencies.append(
+                                    time.perf_counter() - t0
+                                )
+                        fut.add_done_callback(_record)
+                    futures[s.session_id].append(fut)
+            report = svc.drain()
+            result.run_wall = time.perf_counter() - t_run
+            result.errors = list(report.errors)
+            result.cache_stats = dict(report.cache_stats)
+            result.pair_cache_stats = dict(report.pair_cache_stats)
+    finally:
+        if tmp_tier_dir is not None:
+            shutil.rmtree(tmp_tier_dir, ignore_errors=True)
 
     t_oracle = time.perf_counter()
     for s in sessions:

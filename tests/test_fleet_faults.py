@@ -1,0 +1,433 @@
+"""Fault injection for the verification fleet and its shared remote tier.
+
+The scale-out safety claims (ISSUE 8, docs/SCALE_OUT.md):
+
+  * a worker process dying mid-pair loses no answers — the fleet respawns
+    the shard, replays its journal, and drains with the same verdicts and
+    certificates an undisturbed run produces, with zero oracle violations;
+  * a damaged remote tier (truncated payloads, corrupted entries, swapped
+    bytes, garbage lease files) degrades to counted misses — it can cost
+    recomputation, it can never serve wrong bytes, and it never raises
+    into a verification session;
+  * stale refcounts and double releases never free a payload a live key
+    still references (the live-key scan is authoritative, not the
+    refcount file).
+
+These mirror the partial-write regressions the single-process caches
+already carry (``test_verdict_cache.py``, ``DiskMaterializationStore``) at
+the tier level, plus the process-death cases only a fleet can have.
+"""
+
+import json
+import os
+import signal
+import time
+
+import numpy as np
+import pytest
+
+from repro.api.certificate import certificate_from_evidence
+from repro.api.config import VeerConfig
+from repro.engine.store import table_digest
+from repro.engine.table import Table, tables_identical
+from repro.service import VerificationFleet
+from repro.service.remote import (
+    FileTier,
+    TieredPairCache,
+    make_tier,
+)
+from repro.service.remote.adapters import _tier_pair_key
+from repro.service.remote.tier import LocalTier, PairRecord
+from repro.service.synthetic import make_chain
+from repro.workload.config import WorkloadConfig
+from repro.workload.generator import SessionGenerator
+from repro.workload.replay import ReplayResult, _check_session
+
+CONFIG = VeerConfig(evs=("equitas", "spes", "udp"), max_decompositions=300)
+
+
+def _table(seed: int = 0, n: int = 40) -> Table:
+    rng = np.random.default_rng(seed)
+    return Table(
+        {
+            "a": rng.integers(-5, 9, n).astype(np.float64),
+            "b": np.array([f"s{i % 7}" for i in range(n)], dtype=object),
+        },
+        ["a", "b"],
+    )
+
+
+def _small_workload() -> WorkloadConfig:
+    return WorkloadConfig(
+        seed=11, sessions=4, clients=4, chain_length=6, max_decompositions=60
+    )
+
+
+# -- worker death -------------------------------------------------------------
+@pytest.mark.parametrize("shared_tier", ["local", "remote"])
+def test_worker_kill_mid_pair_reassigns_shard_and_drains(tmp_path, shared_tier):
+    """SIGKILL one worker while its shard has jobs in flight: the fleet
+    must respawn, replay the journal, resolve every future, and the
+    answers must pass the full differential oracle suite."""
+    wc = _small_workload()
+    sessions = [SessionGenerator(wc).session(i) for i in range(wc.sessions)]
+    cfg = CONFIG.replace(
+        max_decompositions=wc.max_decompositions,
+        shared_tier=shared_tier,
+        tier_dir=str(tmp_path / "tier") if shared_tier == "remote" else None,
+    )
+    futures = {s.session_id: [] for s in sessions}
+    with VerificationFleet(2, config=cfg) as fleet:
+        for k in range(max(len(s.versions) for s in sessions)):
+            for s in sessions:
+                if k < len(s.versions):
+                    mapping = s.pairs[k - 1].mapping if k > 0 else None
+                    futures[s.session_id].append(
+                        fleet.submit(s.session_id, s.versions[k], mapping)
+                    )
+            if k == 2:  # mid-chain: shards have both answered and queued jobs
+                victim = fleet._procs[0]
+                os.kill(victim.pid, signal.SIGKILL)
+        report = fleet.drain()
+
+    assert report.recoveries >= 1, "the killed worker was never recovered"
+    assert not report.errors
+    result = ReplayResult(config=wc)
+    for s in sessions:
+        assert all(f.done() for f in futures[s.session_id])
+        _check_session(
+            s, futures[s.session_id], result,
+            registry=None, exec_reuse=False,
+            collect_windows=False, check_oracles=True,
+        )
+    assert result.pairs == wc.total_pairs
+    assert not result.violations, "\n".join(map(str, result.violations[:10]))
+
+
+def test_kill_then_results_match_undisturbed_fleet():
+    """Verdicts and certificate bytes after a kill+replay equal those of a
+    fleet that never lost a worker (determinism across recovery)."""
+    chain = make_chain(6)
+
+    def run(kill: bool):
+        outs = []
+        with VerificationFleet(2, config=CONFIG) as fleet:
+            futs = [
+                fleet.submit(f"c{c}", v) for c in range(3) for v in chain
+            ]
+            if kill:
+                os.kill(fleet._procs[0].pid, signal.SIGKILL)
+            fleet.drain()
+            for f in futs:
+                r = f.result()
+                outs.append(
+                    None
+                    if r is None
+                    else (
+                        r.verdict,
+                        r.certificate.to_json() if r.certificate else None,
+                    )
+                )
+        return outs
+
+    assert run(kill=True) == run(kill=False)
+
+
+def test_shard_lost_after_repeated_deaths_fails_cleanly(tmp_path):
+    """A shard whose worker cannot stay alive is written off: unresolved
+    futures fail with FleetWorkerLost instead of hanging forever."""
+    import repro.service.fleet as fleet_mod
+
+    chain = make_chain(3)
+    fleet = VerificationFleet(1, config=CONFIG)
+    try:
+        futs = [fleet.submit("c0", v) for v in chain]
+        # make every respawn die instantly, then trip the liveness path
+        fleet._respawns[0] = fleet_mod.MAX_RESPAWNS_PER_SHARD
+        os.kill(fleet._procs[0].pid, signal.SIGKILL)
+        report = fleet.drain()
+        assert report.errors
+        assert fleet._shard_lost[0] is not None
+        pending = [f for f in futs if f.exception() is not None]
+        for f in pending:
+            assert isinstance(f.exception(), fleet_mod.FleetWorkerLost)
+        with pytest.raises(fleet_mod.FleetWorkerLost):
+            fleet.submit("c0", chain[0])
+    finally:
+        fleet.close()
+
+
+# -- corrupted remote entries -------------------------------------------------
+def _entry_files(tier: FileTier, namespace: str):
+    return sorted((tier.dir / namespace).glob("*.json"))
+
+
+def test_truncated_and_corrupt_entries_read_as_counted_misses(tmp_path):
+    tier = FileTier(str(tmp_path))
+    tier.put_verdict("equitas", "fp1", True, 0.4)
+    tier.put_pair("k1", PairRecord(True, None, 3, 0.2))
+    tier.put_validity("spes", "fp2", True)
+
+    for namespace in ("verdicts", "pairs", "validity"):
+        (path,) = _entry_files(tier, namespace)
+        path.write_text(path.read_text()[: len(path.read_text()) // 2])
+
+    before = tier.corrupt_entries_skipped
+    assert tier.get_verdict("equitas", "fp1") is None
+    assert tier.get_pair("k1") is None
+    assert tier.get_validity("spes", "fp2") is None
+    assert tier.corrupt_entries_skipped == before + 3
+    # the damaged files were dropped: the next read is a plain miss
+    assert tier.get_pair("k1") is None
+    for namespace in ("verdicts", "pairs", "validity"):
+        assert not _entry_files(tier, namespace)
+
+
+def test_entry_keyed_for_different_key_is_rejected(tmp_path):
+    """An entry whose embedded key disagrees with its filename position
+    (tampering, or a hash collision gone wrong) must not be served."""
+    tier = FileTier(str(tmp_path))
+    tier.put_verdict("equitas", "fp-a", False, 0.1)
+    (path,) = _entry_files(tier, "verdicts")
+    rec = json.loads(path.read_text())
+    rec["k"] = ["equitas", "fp-OTHER"]
+    path.write_text(json.dumps(rec))
+    assert tier.get_verdict("equitas", "fp-a") is None
+    assert tier.corrupt_entries_skipped >= 1
+
+
+def test_truncated_table_payload_reads_as_miss(tmp_path):
+    tier = FileTier(str(tmp_path))
+    t = _table(1)
+    tier.put_table("mat:k1", t, 0.7)
+    (npz,) = sorted((tier.dir / "objects").glob("*.npz"))
+    npz.write_bytes(npz.read_bytes()[:20])
+    assert tier.get_table("mat:k1") is None
+    assert tier.corrupt_entries_skipped >= 1
+    # a rewrite heals the slot
+    tier.put_table("mat:k1", t, 0.7)
+    got = tier.get_table("mat:k1")
+    assert got is not None and tables_identical(got[0], t)
+
+
+def test_swapped_payload_bytes_fail_digest_check(tmp_path):
+    """A payload that parses fine but does not hash to its content address
+    (swapped/forged object file) is rejected, never served."""
+    tier = FileTier(str(tmp_path))
+    t1, t2 = _table(1), _table(2)
+    assert table_digest(t1) != table_digest(t2)
+    tier.put_table("k1", t1)
+    tier.put_table("k2", t2)
+    d1, d2 = table_digest(t1), table_digest(t2)
+    obj = tier.dir / "objects"
+    # overwrite t1's payload with t2's bytes: valid npz, wrong content
+    (obj / f"{d1}.npz").write_bytes((obj / f"{d2}.npz").read_bytes())
+    (obj / f"{d1}.meta.json").write_text((obj / f"{d2}.meta.json").read_text())
+    assert tier.get_table("k1") is None
+    assert tier.digest_rejections == 1
+    # k2 is untouched and still verifies
+    got = tier.get_table("k2")
+    assert got is not None and tables_identical(got[0], t2)
+
+
+def test_garbage_lease_file_still_excludes(tmp_path):
+    """Lease safety is the flock, not the file contents — corrupt bytes in
+    a lease file change nothing about mutual exclusion."""
+    tier = FileTier(str(tmp_path))
+    lease = tier.lease("pair:x")
+    lease.acquire(block=False)
+    lease.release()
+    for p in (tier.dir / "leases").glob("*.lock"):
+        p.write_bytes(b"\x00garbage\xff" * 7)
+    a, b = tier.lease("pair:x"), tier.lease("pair:x")
+    assert a.acquire(block=False)
+    assert not b.acquire(block=False)
+    a.release()
+    assert b.acquire(block=False)
+    b.release()
+
+
+def test_tampered_pair_certificate_is_recomputed_not_served(tmp_path):
+    """The certificate-replay gate: a remote pair record whose certificate
+    does not replay green against THIS pair is a counted miss — the pair
+    is re-verified locally and the right answer still comes back."""
+    chain = make_chain(3)
+    P, Q = chain[0], chain[1]
+    veer = CONFIG.build(None)
+
+    def compute():
+        verdict, stats, evidence = veer.verify_with_evidence(
+            P, Q, None, semantics=CONFIG.semantics
+        )
+        return verdict, stats, certificate_from_evidence(evidence)
+
+    tier = FileTier(str(tmp_path))
+    key = TieredPairCache.make_key(P, Q, CONFIG.semantics, None)
+    tkey = _tier_pair_key(key)
+
+    # honest record first: a fresh cache on the same tier must serve it
+    honest = TieredPairCache(tier)
+    verdict0, _, cert0, reused0 = honest.compute_or_reuse(
+        key, compute, pair=(P, Q)
+    )
+    assert reused0 is False and verdict0 is not None and cert0 is not None
+    served = TieredPairCache(tier)
+    verdict1, _, cert1, reused1 = served.compute_or_reuse(
+        key, lambda: (_ for _ in ()).throw(AssertionError("must not compute")),
+        pair=(P, Q),
+    )
+    assert reused1 is True and verdict1 == verdict0
+    assert cert1.to_json() == cert0.to_json()
+    assert served.tier_hits == 1
+
+    # tamper: store the certificate of a DIFFERENT pair under this key
+    _, _, other_ev = veer.verify_with_evidence(
+        chain[1], chain[2], None, semantics=CONFIG.semantics
+    )
+    other_cert = certificate_from_evidence(other_ev)
+    tier.put_pair(
+        tkey,
+        PairRecord(verdict0, other_cert.to_json(), 1, 0.1),
+    )
+    gated = TieredPairCache(tier)
+    verdict2, _, cert2, reused2 = gated.compute_or_reuse(
+        key, compute, pair=(P, Q)
+    )
+    assert reused2 is False, "tampered remote record must not be served"
+    assert gated.tier_replay_rejections == 1
+    assert verdict2 == verdict0
+    assert cert2.to_json() == cert0.to_json()
+
+    # record with no certificate at all: also never served from remote
+    tier.put_pair(tkey, PairRecord(verdict0, None, 1, 0.1))
+    bare = TieredPairCache(tier)
+    _, _, _, reused3 = bare.compute_or_reuse(key, compute, pair=(P, Q))
+    assert reused3 is False and bare.tier_replay_rejections == 1
+
+
+def test_local_tier_pair_hits_served_without_replay():
+    """LocalTier is trusted (same process wrote it): hits serve as-is."""
+    chain = make_chain(3)
+    P, Q = chain[0], chain[1]
+    veer = CONFIG.build(None)
+
+    def compute():
+        verdict, stats, evidence = veer.verify_with_evidence(
+            P, Q, None, semantics=CONFIG.semantics
+        )
+        return verdict, stats, certificate_from_evidence(evidence)
+
+    tier = LocalTier()
+    key = TieredPairCache.make_key(P, Q, CONFIG.semantics, None)
+    first = TieredPairCache(tier)
+    verdict0, _, _, _ = first.compute_or_reuse(key, compute, pair=(P, Q))
+    second = TieredPairCache(tier)
+    verdict1, _, _, reused = second.compute_or_reuse(
+        key, lambda: (_ for _ in ()).throw(AssertionError("must not compute")),
+        pair=(P, Q),
+    )
+    assert reused is True and verdict1 == verdict0
+    assert second.tier_replay_rejections == 0
+
+
+# -- refcounts ----------------------------------------------------------------
+def test_stale_refcount_never_frees_live_materialization(tmp_path):
+    tier = FileTier(str(tmp_path))
+    t = _table(3)
+    tier.put_table("k1", t)
+    tier.put_table("k2", t)  # same content: one payload, two keys
+    d = table_digest(t)
+    # sabotage the refcount file to claim zero references
+    (tier.dir / "objects" / f"{d}.refs").write_text('{"count": 0}')
+    tier.release_table("k2")
+    # k1 still references the payload: the live-key scan must keep it
+    got = tier.get_table("k1")
+    assert got is not None and tables_identical(got[0], t)
+    assert (tier.dir / "objects" / f"{d}.npz").exists()
+
+
+def test_double_release_never_frees_live_materialization(tmp_path):
+    tier = FileTier(str(tmp_path))
+    t = _table(4)
+    tier.put_table("k1", t)
+    tier.put_table("k2", t)
+    tier.release_table("k2")
+    tier.release_table("k2")  # double release: must be a no-op
+    tier.release_table("k2")
+    got = tier.get_table("k1")
+    assert got is not None and tables_identical(got[0], t)
+    # releasing the last live key DOES free the payload
+    tier.release_table("k1")
+    assert tier.get_table("k1") is None
+    assert not list((tier.dir / "objects").glob("*.npz"))
+
+
+def test_corrupt_refcount_file_resyncs_from_live_scan(tmp_path):
+    tier = FileTier(str(tmp_path))
+    t = _table(5)
+    tier.put_table("k1", t)
+    tier.put_table("k2", t)
+    d = table_digest(t)
+    (tier.dir / "objects" / f"{d}.refs").write_text("not json at all")
+    tier.release_table("k2")
+    assert tier.get_table("k1") is not None
+    # the refs file was rebuilt from the authoritative key scan
+    refs = json.loads((tier.dir / "objects" / f"{d}.refs").read_text())
+    assert refs["count"] == 1
+
+
+# -- TTL + byte budget --------------------------------------------------------
+def test_expired_entries_read_as_counted_misses(tmp_path):
+    tier = FileTier(str(tmp_path), ttl_seconds=60.0)
+    tier.put_verdict("equitas", "fp", True, 0.1)
+    tier.put_pair("pk", PairRecord(True, None, 1, 0.1))
+    stale = time.time() - 3600
+    for namespace in ("verdicts", "pairs"):
+        for p in (tier.dir / namespace).glob("*.json"):
+            os.utime(p, (stale, stale))
+    assert tier.get_verdict("equitas", "fp") is None
+    assert tier.get_pair("pk") is None
+    assert tier.expired_entries == 2
+
+
+def test_sweep_expires_tables_and_releases_refcounts(tmp_path):
+    tier = FileTier(str(tmp_path), ttl_seconds=60.0)
+    t = _table(6)
+    tier.put_table("k1", t)
+    stale = time.time() - 3600
+    for p in (tier.dir / "tables").glob("*.json"):
+        os.utime(p, (stale, stale))
+    dropped = tier.sweep()
+    assert dropped["expired"] == 1
+    assert tier.get_table("k1") is None
+    assert not list((tier.dir / "objects").glob("*.npz"))
+
+
+def test_byte_budget_evicts_stalest_key_first(tmp_path):
+    # measure one payload's on-disk size, then budget room for ~3 of them
+    probe = FileTier(str(tmp_path / "probe"))
+    probe.put_table("probe", _table(100, n=200))
+    one = probe._object_bytes()
+    assert one > 0
+    budget = 3 * one + one // 2
+    tier = FileTier(str(tmp_path / "tier"), byte_budget=budget)
+    keys = [f"k{i}" for i in range(6)]
+    for i, k in enumerate(keys):
+        tier.put_table(k, _table(100 + i, n=200))
+        time.sleep(0.01)  # distinct mtimes: deterministic staleness order
+    assert tier.evictions > 0
+    assert tier._object_bytes() <= budget
+    # the most recent key always survives (protected on its own put)
+    got = tier.get_table(keys[-1])
+    assert got is not None
+    # the stalest keys are the ones gone
+    assert tier.get_table(keys[0]) is None
+
+
+def test_make_tier_validation(tmp_path):
+    assert isinstance(make_tier("local"), LocalTier)
+    assert isinstance(make_tier("remote", str(tmp_path)), FileTier)
+    with pytest.raises(ValueError):
+        make_tier("remote")
+    with pytest.raises(ValueError):
+        make_tier("carrier-pigeon")
