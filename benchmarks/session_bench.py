@@ -250,8 +250,8 @@ def main() -> None:
 
     if args.dump_windows:
         with open(args.dump_windows, "w") as fh:
-            n = dump_windows(result.windows, fh)
-        print(f"wrote {n} labeled windows to {args.dump_windows}")
+            report = dump_windows(result.windows, fh)
+        print(f"wrote {args.dump_windows}: {report.summary()}")
 
     payload = {
         "name": "session",

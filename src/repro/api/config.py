@@ -82,6 +82,13 @@ class VeerConfig:
     tier_dir: Optional[str] = None          # required when shared_tier="remote"
     tier_ttl_seconds: Optional[float] = None    # remote entry TTL (None = keep)
     tier_byte_budget: Optional[int] = None      # remote payload bound (bytes)
+    # learned search guidance (docs/SEARCH_GUIDANCE.md): "none" = unguided
+    # Algorithm 2; "model" = the featurized scorer reorders the best-first
+    # frontier and the per-window EV attempt order.  Guidance only schedules
+    # work — certificates still gate every verdict — so it can change how
+    # fast a search certifies, never what it certifies.
+    guidance: str = "none"
+    guidance_path: Optional[str] = None     # None = the committed pretrained.json
 
     # -- presets -------------------------------------------------------------
     @staticmethod
@@ -152,6 +159,15 @@ class VeerConfig:
                 f"tier_byte_budget must be a positive int or None, "
                 f"got {self.tier_byte_budget!r}"
             )
+        if self.guidance not in ("none", "model"):
+            raise ConfigError(
+                f"guidance must be 'none' or 'model', got {self.guidance!r}"
+            )
+        if self.guidance == "none" and self.guidance_path is not None:
+            raise ConfigError(
+                "guidance_path requires guidance='model' "
+                f"(got guidance={self.guidance!r})"
+            )
         from repro.engine.plane import available_planes  # late: avoid cycle
 
         if self.plane not in available_planes():
@@ -179,6 +195,11 @@ class VeerConfig:
             cache = VerdictCache(
                 self.cache_path, max_entries=self.cache_max_entries
             )
+        guidance = None
+        if self.guidance == "model":
+            from repro.learn import load_guidance  # late: learn -> core -> api
+
+            guidance = load_guidance(self.guidance_path)
         return Veer(
             registry.build(list(self.evs)),
             **{f: getattr(self, f) for f in _FLAG_FIELDS},
@@ -186,6 +207,7 @@ class VeerConfig:
             max_workers=self.max_workers,
             verdict_cache=cache,
             search_backend=self.search_backend,
+            guidance=guidance,
         )
 
     # -- serialization -------------------------------------------------------

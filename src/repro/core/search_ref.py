@@ -52,6 +52,8 @@ class WindowOutcome:
     ``_commit_outcome`` applies them on the search thread in deterministic
     planned order.  The stat deltas ride along so parallel runs account EV
     calls exactly where the commit happens, not where the thread ran.
+    ``attempts`` lists the EVs consulted in order (cache answers included) —
+    it feeds ``VeerStats.ev_attempts`` and the corpus harvest observer.
     """
 
     verdict: Optional[bool]
@@ -61,6 +63,7 @@ class WindowOutcome:
     cache_hits: int = 0
     calls_saved: int = 0
     time_saved: float = 0.0
+    attempts: Tuple[str, ...] = ()
 
 
 class BaseSearchContext:
@@ -81,11 +84,21 @@ class BaseSearchContext:
         evs: Sequence[BaseEV],
         stats,
         cache: Optional[VerdictCache] = None,
+        guidance=None,
+        observer=None,
     ):
         self.pair = pair
         self.evs = evs
         self.stats = stats
         self.cache = cache
+        # learned search guidance (repro.learn.SearchGuidance or None) and
+        # its per-handle score/feature memo — guidance only *schedules* work
+        # (frontier order, EV attempt order); verdicts still come from EVs
+        self.guidance = guidance
+        self.guidance_cache: Dict[object, Tuple] = {}
+        # corpus-harvest hook: called once per freshly committed window as
+        # observer(ctx, win, WindowOutcome) — see repro.learn.train
+        self.observer = observer
         self._verdict: Dict[object, Optional[bool]] = {}
         self.dead: Set[object] = set()
         # evidence trail: which window was decided how ("identical" or the
@@ -187,6 +200,16 @@ class BaseSearchContext:
             return self._verdict[win]
         return self._commit_outcome(win, self._compute_outcome(win))
 
+    def ev_order(self, win) -> Tuple[int, ...]:
+        """The order EVs are attempted for this window.  Unguided: the
+        registry's canonical valid-EV order.  Guided: the learned per-EV
+        scores reorder the *same set* — which EV answers first can change,
+        never whether an answer counts (each EV's verdict is its own)."""
+        valid = self.valid_evs(win)
+        if self.guidance is None or len(valid) < 2:
+            return valid
+        return self.guidance.ev_order(self, win, valid)
+
     def _compute_outcome(self, win) -> WindowOutcome:
         """Check one window without mutating verdict/provenance/stats state.
 
@@ -202,8 +225,9 @@ class BaseSearchContext:
         qp = self.query_pair(win)
         if qp is None:
             return out
-        for i in self.valid_evs(win):
+        for i in self.ev_order(win):
             ev = self.evs[i]
+            out.attempts += (ev.name,)
             if isinstance(ev, CachedEV):
                 r, hit, dt, saved = ev.check_recorded(qp)
                 if hit:
@@ -245,7 +269,11 @@ class BaseSearchContext:
         s.ev_calls_saved += out.calls_saved
         s.ev_time_saved += out.time_saved
         s.windows_verified += 1
+        for name in out.attempts:
+            s.ev_attempts[name] = s.ev_attempts.get(name, 0) + 1
         self._verdict[win] = out.verdict
+        if self.observer is not None:
+            self.observer(self, win, out)
         return out.verdict
 
     def prefetch(self, order: List, pool: ThreadPoolExecutor) -> None:
@@ -290,8 +318,8 @@ class SetSearchContext(BaseSearchContext):
     rather than speed).  Query pairs and fingerprints go through the
     ``VersionPair``-level memos, exactly as before the bitmask kernel."""
 
-    def __init__(self, pair, evs, stats, cache=None):
-        super().__init__(pair, evs, stats, cache)
+    def __init__(self, pair, evs, stats, cache=None, guidance=None, observer=None):
+        super().__init__(pair, evs, stats, cache, guidance, observer)
         self._valid: Dict[FrozenSet[int], Tuple[int, ...]] = {}
 
     def query_pair(self, win: FrozenSet[int]) -> Optional[QueryPair]:
@@ -339,7 +367,10 @@ def ref_algorithm2(
     entire_pair = universe if len(universe) == len(ctx.pair.units) else None
 
     counter = itertools.count()
-    heap: List[Tuple[float, int, Tuple[FrozenSet[int], ...]]] = []
+    guidance = veer.guidance
+    # heap entries: (score, tiebreak counter, windows); guided searches use
+    # a (learned, heuristic) score pair so the unguided ranking breaks ties
+    heap: List[Tuple[object, int, Tuple[FrozenSet[int], ...]]] = []
 
     def push(windows: Tuple[FrozenSet[int], ...]):
         # frontier bound: never let explored + frontier exceed the budget.
@@ -353,6 +384,8 @@ def ref_algorithm2(
         score = (
             -decomposition_score(windows, len(universe)) if veer.ranking else 0.0
         )
+        if guidance is not None:
+            score = (-guidance.decomposition_score(ctx, windows), score)
         heapq.heappush(heap, (score, next(counter), windows))
 
     push(initial)
@@ -374,6 +407,8 @@ def ref_algorithm2(
         if veer.eager_verify and not doomed:
             r = veer._try_verify_decomposition(ctx, windows, entire_pair)
             if r is not UNKNOWN:
+                if r is TRUE:
+                    stats.note_first_certificate()
                 stats.explore_time += time.perf_counter() - t_explore
                 return r
 
@@ -424,6 +459,8 @@ def ref_algorithm2(
         if all_marked and not doomed:
             r = veer._try_verify_decomposition(ctx, windows, entire_pair)
             if r is not UNKNOWN:
+                if r is TRUE:
+                    stats.note_first_certificate()
                 stats.explore_time += time.perf_counter() - t_explore
                 return r
         if all_marked and doomed and len(windows) == 1 and windows[0] == entire_pair:

@@ -133,6 +133,21 @@ class VeerStats:
     windows_deduped: int = 0     # windows resolved via in-pair fingerprint dedup
     ev_calls_saved: int = 0      # cache_hits + per-window savings from dedup
     ev_time_saved: float = 0.0   # sum of original check times of saved calls
+    # how many decompositions Algorithm 2 popped before the first one whose
+    # windows all verified (None when the search never certified — UNK/NEQ
+    # pairs and the exact-match shortcut, which needs no search at all).
+    # The guided-search headline metric: machine-independent, directly
+    # comparable across frontier orderings.
+    decompositions_to_first_certificate: Optional[int] = None
+    # EV attempts per EV name across every checked window (cache-answered
+    # attempts included) — shows where the attempt ordering spends its tries
+    ev_attempts: Dict[str, int] = field(default_factory=dict)
+
+    def note_first_certificate(self) -> None:
+        """Record the decomposition count at the first verified covering
+        decomposition (idempotent — later segments don't overwrite it)."""
+        if self.decompositions_to_first_certificate is None:
+            self.decompositions_to_first_certificate = self.decompositions_explored
 
     def as_dict(self) -> Dict[str, object]:
         return dict(self.__dict__)
@@ -174,6 +189,8 @@ class Veer:
         max_workers: int = 1,
         verdict_cache: Optional[VerdictCache] = None,
         search_backend: str = "bitmask",
+        guidance=None,
+        window_observer=None,
     ):
         if search_backend not in SEARCH_BACKENDS:
             raise ValueError(
@@ -181,6 +198,14 @@ class Veer:
                 f"got {search_backend!r}"
             )
         self.search_backend = search_backend
+        # learned search guidance (repro.learn.SearchGuidance or None):
+        # reorders the best-first frontier and the per-window EV attempt
+        # order; never decides a verdict — certificates still gate everything
+        self.guidance = guidance
+        # corpus-harvest hook: observer(ctx, win, WindowOutcome) per freshly
+        # committed window verdict (repro.learn.train uses it to collect
+        # negatives the certificate corpus never sees)
+        self.window_observer = window_observer
         self.verdict_cache = verdict_cache
         self.evs = wrap_evs(evs, verdict_cache)
         self.segmentation = segmentation
@@ -410,9 +435,19 @@ class Veer:
 
     # ------------------------------------------------------------- Algorithm 2
     def _make_context(self, pair: VersionPair, stats: VeerStats) -> BaseSearchContext:
-        if self.search_backend == "reference":
-            return SetSearchContext(pair, self.evs, stats, self.verdict_cache)
-        return _SearchContext(pair, self.evs, stats, self.verdict_cache)
+        cls = (
+            SetSearchContext
+            if self.search_backend == "reference"
+            else _SearchContext
+        )
+        return cls(
+            pair,
+            self.evs,
+            stats,
+            self.verdict_cache,
+            guidance=self.guidance,
+            observer=self.window_observer,
+        )
 
     def _algorithm2(
         self,
@@ -460,7 +495,12 @@ class Veer:
         )
 
         counter = itertools.count()
-        heap: List[Tuple[float, int, Tuple[int, ...]]] = []
+        guidance = self.guidance
+        # heap entries: (score, tiebreak counter, ids); guided searches use
+        # a (learned, heuristic) score pair so the unguided ranking breaks
+        # ties — identical learned scores fall back to exactly the unguided
+        # exploration preference
+        heap: List[Tuple[object, int, Tuple[int, ...]]] = []
 
         def push(ids: Tuple[int, ...]):
             # frontier bound: never let explored + frontier exceed the budget.
@@ -478,6 +518,8 @@ class Veer:
                 if use_ranking
                 else 0.0
             )
+            if guidance is not None:
+                score = (-guidance.decomposition_score(ctx, ids), score)
             heapq.heappush(heap, (score, next(counter), ids))
 
         push(initial)
@@ -500,6 +542,8 @@ class Veer:
             if self.eager_verify and not doomed:
                 r = self._try_verify_decomposition(ctx, windows, entire_id)
                 if r is not UNKNOWN:
+                    if r is TRUE:
+                        stats.note_first_certificate()
                     stats.explore_time += time.perf_counter() - t_explore
                     return r
 
@@ -553,6 +597,8 @@ class Veer:
             if all_marked and not doomed:
                 r = self._try_verify_decomposition(ctx, windows, entire_id)
                 if r is not UNKNOWN:
+                    if r is TRUE:
+                        stats.note_first_certificate()
                     stats.explore_time += time.perf_counter() - t_explore
                     return r
             if all_marked and doomed and len(windows) == 1 and windows[0] == entire_id:
@@ -737,8 +783,10 @@ class _SearchContext(BaseSearchContext):
         evs: Sequence[BaseEV],
         stats: VeerStats,
         cache: Optional[VerdictCache] = None,
+        guidance=None,
+        observer=None,
     ):
-        super().__init__(pair, evs, stats, cache)
+        super().__init__(pair, evs, stats, cache, guidance, observer)
         self.table = WindowTable(pair)
 
     def query_pair(self, wid: int) -> Optional[QueryPair]:

@@ -18,8 +18,11 @@ from repro.workload.config import (
     smoke_config,
 )
 from repro.workload.corpus import (
+    DumpReport,
     WindowExample,
+    dedupe_windows,
     dump_windows,
+    example_key,
     load_windows,
     windows_from_certificate,
 )
@@ -47,13 +50,16 @@ __all__ = [
     "OracleViolation",
     "PlannedPair",
     "ReplayResult",
+    "DumpReport",
     "SessionGenerator",
     "WindowExample",
     "WorkloadConfig",
     "WorkloadConfigError",
     "canonical_sink_bytes",
+    "dedupe_windows",
     "default_veer_config",
     "dump_windows",
+    "example_key",
     "extended_config",
     "load_windows",
     "replay_sessions",

@@ -88,6 +88,11 @@ class WorkloadConfig:
     # "remote" (a FileTier directory; replay creates a temporary one unless
     # the driver is given tier_dir explicitly).  See docs/SCALE_OUT.md.
     shared_tier: str = "local"
+    # learned search guidance of the replayed verifiers: "none" (unguided)
+    # or "model" (the committed pretrained scorer steers Algorithm 2 —
+    # docs/SEARCH_GUIDANCE.md); scheduling-only, so oracle expectations are
+    # unchanged
+    guidance: str = "none"
 
     # -- convenience ---------------------------------------------------------
     def replace(self, **changes: Any) -> "WorkloadConfig":
@@ -125,6 +130,10 @@ class WorkloadConfig:
             raise WorkloadConfigError(
                 f"shared_tier must be 'local' or 'remote', "
                 f"got {self.shared_tier!r}"
+            )
+        if self.guidance not in ("none", "model"):
+            raise WorkloadConfigError(
+                f"guidance must be 'none' or 'model', got {self.guidance!r}"
             )
         if not self.workloads:
             raise WorkloadConfigError("config selects no workloads")

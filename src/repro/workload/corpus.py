@@ -38,14 +38,18 @@ class WindowExample:
     family: str                     # edit family that produced the pair
     expected: str                   # the pair's oracle label ("eq"/"any")
     # the window itself
-    record_kind: str                # "ev" | "identical" | "symbolic"
-    cert_kind: str                  # EXACT/DECOMPOSITION/WITNESS/SYMBOLIC
+    record_kind: str                # "ev" | "identical" | "symbolic" | "search"
+    cert_kind: str                  # EXACT/DECOMPOSITION/WITNESS/SYMBOLIC/-
     verdict: Optional[bool]         # the window's EV verdict (the label)
     ev_name: Optional[str] = None
     fingerprint: Optional[str] = None
     units: tuple = ()
     op_hist: Dict[str, int] = field(default_factory=dict)
     topology: Dict[str, int] = field(default_factory=dict)
+    # EVs consulted for this window, in attempt order (search-harvested
+    # examples only — certificates record just the deciding EV).  Trains the
+    # per-EV attempt-ordering scorers: every non-final attempt was a miss.
+    ev_attempts: tuple = ()
 
     def to_dict(self) -> Dict[str, Any]:
         return {
@@ -62,6 +66,7 @@ class WindowExample:
             "units": list(self.units),
             "op_hist": dict(sorted(self.op_hist.items())),
             "topology": dict(sorted(self.topology.items())),
+            "ev_attempts": list(self.ev_attempts),
         }
 
     @staticmethod
@@ -80,6 +85,7 @@ class WindowExample:
             units=tuple(d.get("units", ())),
             op_hist=dict(d.get("op_hist", {})),
             topology=dict(d.get("topology", {})),
+            ev_attempts=tuple(d.get("ev_attempts", ())),
         )
 
 
@@ -144,14 +150,80 @@ def windows_from_certificate(
     return out
 
 
-def dump_windows(examples: Iterable[WindowExample], fh: TextIO) -> int:
-    """Write examples as JSON lines; returns the count written."""
-    n = 0
+def example_key(ex: WindowExample) -> str:
+    """The dedup identity of an example: the rename-invariant fingerprint
+    when the window has one (fingerprint equality implies identical shape
+    features AND identical EV answers), else the canonical JSON of the
+    shape+label fields (so fingerprint-less records still dedup exactly)."""
+    if ex.fingerprint:
+        return ex.fingerprint
+    return json.dumps(
+        [
+            ex.record_kind,
+            list(ex.units),
+            dict(sorted(ex.op_hist.items())),
+            dict(sorted(ex.topology.items())),
+            _VERDICT_CODE[ex.verdict],
+        ],
+        sort_keys=True,
+    )
+
+
+@dataclass
+class DumpReport:
+    """What ``dump_windows`` wrote: counts by label plus duplicates dropped.
+
+    Warm-cache sessions re-decide the same windows over and over; without
+    fingerprint dedup those repeats dominate the corpus and a scorer
+    trained on it mostly memorizes the duplicates."""
+
+    written: int = 0
+    dropped_duplicates: int = 0
+    label_counts: Dict[str, int] = field(default_factory=dict)
+
+    def summary(self) -> str:
+        labels = ", ".join(
+            f"{k}={v}" for k, v in sorted(self.label_counts.items())
+        )
+        return (
+            f"{self.written} examples ({labels or 'no labels'}), "
+            f"{self.dropped_duplicates} duplicates dropped"
+        )
+
+
+def dedupe_windows(examples: Iterable[WindowExample]) -> List[WindowExample]:
+    """First occurrence per ``example_key``, input order preserved."""
+    seen: set = set()
+    out: List[WindowExample] = []
     for ex in examples:
+        k = example_key(ex)
+        if k in seen:
+            continue
+        seen.add(k)
+        out.append(ex)
+    return out
+
+
+def dump_windows(
+    examples: Iterable[WindowExample], fh: TextIO, *, dedupe: bool = True
+) -> DumpReport:
+    """Write examples as JSON lines, deduplicated by fingerprint by default;
+    returns a ``DumpReport`` with per-label counts."""
+    report = DumpReport()
+    seen: set = set()
+    for ex in examples:
+        if dedupe:
+            k = example_key(ex)
+            if k in seen:
+                report.dropped_duplicates += 1
+                continue
+            seen.add(k)
         fh.write(json.dumps(ex.to_dict(), sort_keys=True))
         fh.write("\n")
-        n += 1
-    return n
+        report.written += 1
+        code = _VERDICT_CODE[ex.verdict]
+        report.label_counts[code] = report.label_counts.get(code, 0) + 1
+    return report
 
 
 def load_windows(fh: TextIO) -> Iterator[WindowExample]:

@@ -175,6 +175,7 @@ def default_veer_config(config: WorkloadConfig) -> VeerConfig:
         evs=REPLAY_EVS,
         max_decompositions=config.max_decompositions,
         plane=config.plane,
+        guidance=config.guidance,
     )
 
 

@@ -1,0 +1,92 @@
+"""Direct unit tests for the §7.3 ranking functions (``repro.core.ranking``).
+
+Until now these were only exercised through the search integration; the
+guided-search work (ISSUE 9) leans on ``decomposition_score_from_sizes`` as
+the deterministic tie-break under the learned score, so the functions get
+their own contract tests: set-based vs size-based bit-identity, empty and
+degenerate inputs, ordering direction, and tie structure.
+"""
+
+import random
+
+from repro.core.ranking import (
+    decomposition_score,
+    decomposition_score_from_sizes,
+    segment_score,
+)
+
+
+def test_segment_score_is_sum():
+    assert segment_score(0, 0) == 0
+    assert segment_score(3, 2) == 5
+    assert segment_score(10, 1) == 11
+
+
+def test_segment_score_orders_smaller_first():
+    # F(S) = m_S + n_S; the search explores smaller scores first, so a
+    # 2-op/1-change segment must outrank a 5-op/3-change one
+    assert segment_score(2, 1) < segment_score(5, 3)
+
+
+def test_decomposition_score_empty():
+    assert decomposition_score([], 7) == 0.0
+    assert decomposition_score_from_sizes([], 7) == 0.0
+
+
+def test_decomposition_score_singletons():
+    # all-singleton covering of a universe of 4: o_d = 1, w_d = 0 unmerged
+    # beyond the covered mass (universe fully covered) -> G = 1 - 0
+    covering = [frozenset({i}) for i in range(4)]
+    assert decomposition_score(covering, 4) == 1.0
+
+
+def test_decomposition_score_rewards_merging():
+    # merging two singletons into one window raises G (coverage drive)
+    universe = 4
+    singles = [frozenset({0}), frozenset({1}), frozenset({2}), frozenset({3})]
+    merged = [frozenset({0, 1}), frozenset({2}), frozenset({3})]
+    assert decomposition_score(merged, universe) > decomposition_score(
+        singles, universe
+    )
+    entire = [frozenset({0, 1, 2, 3})]
+    assert decomposition_score(entire, universe) > decomposition_score(
+        merged, universe
+    )
+
+
+def test_decomposition_score_penalizes_uncovered_units():
+    # same windows, bigger universe -> more unmerged singletons -> lower G
+    covering = [frozenset({0, 1})]
+    assert decomposition_score(covering, 2) > decomposition_score(covering, 6)
+
+
+def test_sizes_variant_bit_identical_to_set_variant():
+    rng = random.Random(0)
+    for _ in range(200):
+        universe = rng.randint(1, 16)
+        n_windows = rng.randint(1, 6)
+        covering = []
+        next_unit = 0
+        for _ in range(n_windows):
+            size = rng.randint(1, 4)
+            covering.append(frozenset(range(next_unit, next_unit + size)))
+            next_unit += size
+        a = decomposition_score(covering, universe)
+        b = decomposition_score_from_sizes([len(w) for w in covering], universe)
+        # bit-identical, not approximately equal: the bitmask kernel scores
+        # from popcounts and must push heap entries in the same order as the
+        # reference backend scoring from materialized frozensets
+        assert a == b
+
+
+def test_score_ties_between_permutations():
+    # G depends only on the multiset of sizes, so permuted window orders tie
+    # exactly — the search breaks these ties with its insertion counter
+    sizes = [3, 1, 2]
+    universe = 8
+    scores = {
+        decomposition_score_from_sizes(p, universe)
+        for p in ([3, 1, 2], [1, 2, 3], [2, 3, 1], [3, 2, 1])
+    }
+    assert len(scores) == 1
+    assert scores.pop() == decomposition_score_from_sizes(sizes, universe)

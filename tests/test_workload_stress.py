@@ -325,11 +325,19 @@ def test_window_corpus_schema_roundtrip():
     result = replay_sessions(sessions, FAST, collect_windows=True)
     assert result.ok and result.windows, "replay harvested no windows"
     buf = io.StringIO()
-    n = dump_windows(result.windows, buf)
-    assert n == len(result.windows)
+    report = dump_windows(result.windows, buf, dedupe=False)
+    assert report.written == len(result.windows)
+    assert report.dropped_duplicates == 0
     buf.seek(0)
     loaded = list(load_windows(buf))
     assert loaded == list(result.windows)
+    # the default path dedupes by fingerprint and reports per-label counts
+    buf2 = io.StringIO()
+    deduped = dump_windows(result.windows, buf2)
+    assert deduped.written + deduped.dropped_duplicates == len(result.windows)
+    assert sum(deduped.label_counts.values()) == deduped.written
+    buf2.seek(0)
+    assert len(list(load_windows(buf2))) == deduped.written
     # each line is standalone JSON with the full schema
     first = json.loads(buf.getvalue().splitlines()[0])
     for key in ("fingerprint", "op_hist", "topology", "verdict", "workload",
