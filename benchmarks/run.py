@@ -31,6 +31,7 @@ def main() -> None:
     args = ap.parse_args()
     from benchmarks import (
         chain_bench,
+        delta_bench,
         exec_bench,
         figs_scaling,
         plane_bench,
@@ -151,6 +152,16 @@ def main() -> None:
         "exec_bench", time.perf_counter() - t0,
         f"speedup={h['speedup']:.1f}x exec_fraction={h['exec_fraction'] * 100:.0f}% "
         f"tables_served={h['tables_served']}",
+    ))
+
+    print("\n== Delta-cone execution: row deltas vs cone recompute ==")
+    t0 = time.perf_counter()
+    _, h = delta_bench.run(rows=delta_bench.SMOKE_ROWS)
+    csv_lines.append(_csv(
+        "delta_bench", time.perf_counter() - t0,
+        f"speedup={h['speedup']:.1f}x "
+        f"delta_fraction={h['delta_fraction'] * 100:.1f}% "
+        f"certified_pairs={h['certified_pairs']}",
     ))
 
     print("\n== Data plane: jax lowering vs reference engine ==")

@@ -28,6 +28,10 @@ Usage (from the repo root):
                                                       # labeled-window corpus
                                                       #   for the learned-
                                                       #   scorer roadmap item
+    python benchmarks/session_bench.py --exec-mode delta
+                                                      # delta-cone execution
+                                                      #   under the full bit-
+                                                      #   identity oracle
 """
 
 from __future__ import annotations
@@ -80,6 +84,26 @@ def sequential_baseline(sessions, config) -> dict:
             "pairs_per_sec": pairs / max(wall, 1e-9)}
 
 
+def delta_eligible_census(sessions) -> dict:
+    """Label every planned pair with its delta-amenability class.
+
+    Uses ``repro.core.delta.delta_census`` on each consecutive version
+    pair (same analysis the delta tier runs after verification, minus the
+    certificate gate): amenable pairs count under their class (narrow /
+    widen / filter-general / project-cols / agg-swap), ineligible pairs
+    under their ``fallback:*`` reason — the census the ISSUE 10 satellite
+    reports so a workload's delta coverage is visible at a glance."""
+    from repro.core.delta import delta_census
+
+    census: dict = {}
+    for s in sessions:
+        for k, _ in enumerate(s.pairs):
+            P, Q = s.versions[k], s.versions[k + 1]
+            _, label = delta_census(P, Q, s.pairs[k].mapping)
+            census[label] = census.get(label, 0) + 1
+    return census
+
+
 def run(config: WorkloadConfig, *, exec_reuse: bool = False,
         collect_windows: bool = False, baseline: bool = True):
     """Generate + replay one profile; returns ``(result, headline, rows)``.
@@ -99,6 +123,14 @@ def run(config: WorkloadConfig, *, exec_reuse: bool = False,
         f"generated {len(sessions)} sessions / {n_pairs} pairs "
         f"in {gen_wall:.2f}s  (families: "
         + ", ".join(f"{k}={v}" for k, v in sorted(families.items())) + ")"
+    )
+    delta_census = delta_eligible_census(sessions)
+    eligible = sum(
+        v for k, v in delta_census.items() if not k.startswith("fallback:")
+    )
+    print(
+        f"delta-eligible census: {eligible}/{n_pairs} pairs amenable  ("
+        + ", ".join(f"{k}={v}" for k, v in sorted(delta_census.items())) + ")"
     )
 
     result = replay_sessions(
@@ -135,6 +167,9 @@ def run(config: WorkloadConfig, *, exec_reuse: bool = False,
         "busy_rejections": result.busy_rejections,
         "cache_hits": result.cache_stats.get("hits", 0),
         "pair_cache_hits": result.pair_cache_stats.get("hits", 0),
+        "ops_delta": result.ops_delta,
+        "delta_rows": result.delta_rows,
+        "recompute_saved_s": result.recompute_saved_s,
         "speedup": (
             result.pairs_per_sec / max(seq["pairs_per_sec"], 1e-9)
             if seq else None
@@ -143,6 +178,7 @@ def run(config: WorkloadConfig, *, exec_reuse: bool = False,
     rows = {
         "verdicts": result.verdicts,
         "families": families,
+        "delta_census": delta_census,
         "gen_wall_s": gen_wall,
         "run_wall_s": result.run_wall,
         "oracle_wall_s": result.oracle_wall,
@@ -212,6 +248,13 @@ def main() -> None:
     ap.add_argument("--exec-reuse", action="store_true",
                     help="route versions through certificate-seeded partial "
                          "execution and add the bit-identity oracle")
+    ap.add_argument("--exec-mode", choices=("full", "reuse", "delta"),
+                    default="reuse",
+                    help="execution mode of the replayed sessions "
+                         "(VeerConfig.exec_mode); 'delta' propagates row "
+                         "deltas through amenable changed cones and implies "
+                         "--exec-reuse so every served sink is checked "
+                         "bit-identical against a fresh full execution")
     ap.add_argument("--no-baseline", action="store_true",
                     help="skip the sequential no-sharing baseline")
     ap.add_argument("--fleet", type=int, default=0, metavar="N",
@@ -239,11 +282,12 @@ def main() -> None:
     else:
         config = DEFAULT_CONFIG.replace(seed=args.seed)
     config = config.replace(plane=args.plane, fleet=args.fleet,
-                            shared_tier=args.shared_tier).validate()
+                            shared_tier=args.shared_tier,
+                            exec_mode=args.exec_mode).validate()
 
     result, headline, rows = run(
         config,
-        exec_reuse=args.exec_reuse,
+        exec_reuse=args.exec_reuse or args.exec_mode == "delta",
         collect_windows=bool(args.dump_windows),
         baseline=not args.no_baseline,
     )
@@ -264,12 +308,15 @@ def main() -> None:
     if args.json:
         pathlib.Path(args.json).write_text(json.dumps(payload, indent=2) + "\n")
         print(f"wrote {args.json}")
+    exec_oracle = args.exec_reuse or args.exec_mode == "delta"
     if (args.smoke and args.plane == "numpy" and not args.fleet
-            and not check_regression(headline)):
-        # the committed baseline is a numpy-plane thread-service run; other
-        # planes and the process fleet smoke for identity (the oracles
-        # above), not for this rate guard — the fleet's own guard lives in
-        # service_bench / BENCH_service.json
+            and not exec_oracle and not check_regression(headline)):
+        # the committed baseline is a numpy-plane thread-service run without
+        # the exec-identity oracle; other planes, the process fleet, and
+        # exec-reuse/delta runs (which fully re-execute every pair for the
+        # oracle) smoke for identity (the oracles above), not for this rate
+        # guard — the fleet's own guard lives in service_bench /
+        # BENCH_service.json, the delta tier's in delta_bench / BENCH_delta.json
         raise SystemExit(1)
 
 

@@ -69,6 +69,13 @@ class VeerConfig:
     # (sessions, reuse manager): "numpy" = reference, "jax" = vectorized;
     # a pure performance choice — sink bytes are plane-invariant
     plane: str = "numpy"
+    # how execute-with-reuse submits run each certified successor version:
+    # "full" = unseeded re-execution (ablation baseline); "reuse" = recompute
+    # only the changed cone, seeded from the exact-tier frontier (PR 5);
+    # "delta" = additionally propagate row/column deltas through amenable
+    # changed cones (repro.engine.delta), falling back to "reuse" whenever
+    # the edit is not delta-amenable — sink bytes are mode-invariant
+    exec_mode: str = "reuse"
     cache_path: Optional[str] = None
     # LRU bound on the verdict/validity tables of the cache this config
     # creates (None = unbounded); applies to caches built from cache_path —
@@ -174,6 +181,11 @@ class VeerConfig:
             raise ConfigError(
                 f"plane must be one of {available_planes()}, "
                 f"got {self.plane!r}"
+            )
+        if self.exec_mode not in ("full", "reuse", "delta"):
+            raise ConfigError(
+                f"exec_mode must be 'full', 'reuse' or 'delta', "
+                f"got {self.exec_mode!r}"
             )
         return self
 

@@ -55,6 +55,7 @@ from repro.core.window import VersionPair
 
 EXACT_TIER = "exact"
 SEMANTIC_TIER = "semantic"
+DELTA_TIER = "delta"
 
 
 class FrontierError(ValueError):
@@ -233,4 +234,21 @@ def compute_reuse_frontier(
         semantics=certificate.semantics,
         mapping=certificate.mapping,
         entries=tuple(entries),
+    )
+
+
+def compute_delta_plan(frontier: ReuseFrontier, P: DataflowDAG, Q: DataflowDAG):
+    """Delta-tier gate: the O(|Δrows|) plan for a certified pair, or None.
+
+    Certificate-gated exactly like the exact/semantic tiers: callers must
+    pass a ``ReuseFrontier`` obtained from ``compute_reuse_frontier`` —
+    i.e. derived from a True certificate that replayed green for (P, Q).
+    The delta analysis itself (``repro.core.delta``) re-checks signatures,
+    wiring and amenability from P and Q directly, so the frontier only
+    contributes the mapping and the exact-tier region it already verified.
+    """
+    from repro.core.delta import analyze_delta
+
+    return analyze_delta(
+        P, Q, EditMapping(frontier.mapping), exact=frontier.exact
     )

@@ -52,8 +52,12 @@ class ExecStats:
     ``ops_total`` counts the DAG's operators; every operator lands in
     exactly one of ``ops_executed`` (ran ``execute_op`` or bound a source),
     ``ops_reused`` (result adopted without execution — seeded by the
-    caller or served from the store), or ``ops_skipped`` (never needed:
-    upstream of a reused result, or off the requested outputs).
+    caller or served from the store), ``ops_delta`` (result produced by a
+    delta rule in ``repro.engine.delta`` from the prior version's table
+    plus the edit's row delta), or ``ops_skipped`` (never needed: upstream
+    of a reused result, or off the requested outputs).
+    ``delta_rows_processed`` sums the delta rows (inserts + deletes) the
+    delta rules touched — the O(|Δ|) work that replaced full re-execution.
     ``tables_served`` is the subset of reuses fetched from the
     ``MaterializationStore``; ``recompute_time_saved`` sums the recorded
     original compute cost of every served table (``perf_counter``-based,
@@ -64,6 +68,8 @@ class ExecStats:
     ops_executed: int = 0
     ops_reused: int = 0
     ops_skipped: int = 0
+    ops_delta: int = 0
+    delta_rows_processed: int = 0
     plane: str = "numpy"
     ops_lowered: int = 0
     tables_served: int = 0
@@ -174,6 +180,37 @@ class ExecutionPlan:
             raise ValueError("seed_keys/serve_from_store/materialize need a store")
         digests = self.digests if (serve_from_store or materialize) else None
 
+        # -- pin every store entry this run may read: a concurrent
+        #    byte-budget evict mid-run must not free a table between the
+        #    backward pass resolving it and the forward pass consuming it
+        pinned_keys: Tuple[str, ...] = ()
+        if store is not None and hasattr(store, "pin"):
+            want = set(seed_keys.values())
+            if serve_from_store:
+                want.update(d for d in digests.values() if d is not None)
+            if want:
+                pinned_keys = store.pin(want)
+        try:
+            return self._run_passes(
+                keep_list, stats, seed, seed_keys, store,
+                serve_from_store, materialize, digests, t_start,
+            )
+        finally:
+            if pinned_keys:
+                store.unpin(pinned_keys)
+
+    def _run_passes(
+        self,
+        keep_list: List[str],
+        stats: ExecStats,
+        seed: Dict[str, Table],
+        seed_keys: Dict[str, str],
+        store: Optional[MaterializationStore],
+        serve_from_store: bool,
+        materialize: bool,
+        digests: Optional[Dict[str, Optional[str]]],
+        t_start: float,
+    ) -> ExecResult:
         # -- backward pass: find the affected cone, resolving reuse lazily
         resolved: Dict[str, Table] = {}
         needed: Set[str] = set()
@@ -246,7 +283,8 @@ class ExecutionPlan:
                 continue
             stats.peak_live_tables = max(stats.peak_live_tables, len(results))
 
-        stats.ops_skipped = stats.ops_total - stats.ops_executed - stats.ops_reused
+        stats.ops_skipped = (stats.ops_total - stats.ops_executed
+                             - stats.ops_reused - stats.ops_delta)
         stats.wall_time = time.perf_counter() - t_start
         return ExecResult(
             results={k: results[k] for k in keep_list},

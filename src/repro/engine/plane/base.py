@@ -46,3 +46,15 @@ class DataPlane(abc.ABC):
     @abc.abstractmethod
     def execute_op(self, op: D.Operator, inputs: List[Table]) -> Table:
         """Execute one operator; bytes must match the reference plane."""
+
+    def pred_mask(self, pred, table: Table):
+        """Boolean keep-mask of ``pred`` over ``table`` — the delta-kernel
+        primitive (``repro.engine.delta``): a delta filter is a mask over
+        the prior version's materialized table plus a mask over the insert
+        rows, never a row-wise re-filter.  Must be bit-identical to the
+        reference ``eval_pred`` (same epsilon bands); planes with a
+        vectorized predicate path override this to serve the mask from it.
+        """
+        from repro.engine.ops_impl import eval_pred
+
+        return eval_pred(pred, table)

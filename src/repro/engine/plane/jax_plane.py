@@ -356,6 +356,15 @@ class JaxPlane(DataPlane):
         plan = self._pred_plan(op.get("pred"))
         return inputs[0].mask(self._eval_pred_plan(plan, inputs[0]))
 
+    def pred_mask(self, pred, t: Table):
+        """Delta-kernel mask: serve the vectorized two-program predicate
+        kernel when it lowers for this table, else the reference bands —
+        either way bit-identical to ``eval_pred`` (probed at compile)."""
+        plan = self._pred_plan(pred)
+        if plan is not None and _numeric(t, plan.lin_cols):
+            return self._eval_pred_plan(plan, t)
+        return eval_pred(pred, t)
+
     def _proj_plan(self, cols):
         key = repr(cols)
         plan = self._proj_plans.get(key)

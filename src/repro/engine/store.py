@@ -117,6 +117,7 @@ class _BaseStore:
         self._keys: "OrderedDict[str, Tuple[str, float]]" = OrderedDict()
         self._refs: Dict[str, int] = {}     # table_digest -> referencing keys
         self._bytes: Dict[str, int] = {}    # table_digest -> payload bytes
+        self._pins: Dict[str, int] = {}     # key -> pin refcount (evict-exempt)
         self._total_bytes = 0               # running sum of _bytes values
         self._lock = threading.RLock()
         self.hits = 0
@@ -217,8 +218,35 @@ class _BaseStore:
                 "evictions": self.evictions,
                 "dedup_skipped_writes": self.dedup_skipped_writes,
                 "corrupt_entries_skipped": self.corrupt_entries_skipped,
+                "pinned_keys": len(self._pins),
                 "time_saved": self.time_saved,
             }
+
+    # -- pinning --------------------------------------------------------------
+    def pin(self, keys) -> Tuple[str, ...]:
+        """Refcount-pin every *present* key in ``keys`` against LRU eviction.
+
+        An in-flight ``ExecutionPlan.run`` (or the delta engine) pins the
+        store entries it is about to read so a concurrent byte-budget evict
+        cannot free a table mid-run and silently degrade the reuse/delta
+        path to a full recompute.  Returns the keys actually pinned — pass
+        that tuple (not the request) to ``unpin`` when the run finishes.
+        """
+        with self._lock:
+            pinned = tuple(k for k in keys if k in self._keys)
+            for k in pinned:
+                self._pins[k] = self._pins.get(k, 0) + 1
+            return pinned
+
+    def unpin(self, keys) -> None:
+        """Release one pin per key; a key becomes evictable at zero pins."""
+        with self._lock:
+            for k in keys:
+                n = self._pins.get(k, 0) - 1
+                if n <= 0:
+                    self._pins.pop(k, None)
+                else:
+                    self._pins[k] = n
 
     # -- internals (caller holds the lock) ------------------------------------
     def _record_bytes(self, tdigest: str, nbytes: int) -> None:
@@ -241,16 +269,21 @@ class _BaseStore:
 
     def _evict(self, protect: Optional[str] = None) -> None:
         """LRU-evict keys until under the byte budget (O(1) per check via
-        the running byte total).  The just-touched ``protect`` key survives
-        even when a single table exceeds the whole budget — otherwise one
-        oversized put would thrash forever."""
+        the running byte total).  The just-touched ``protect`` key and any
+        ``pin``-ned keys survive even when the remaining tables exceed the
+        whole budget — otherwise one oversized put would thrash forever, and
+        an in-flight run could lose a table it is about to read."""
         if self.byte_budget is None:
             return
         while self._total_bytes > self.byte_budget and len(self._keys) > 1:
-            stalest = next(iter(self._keys))
-            if stalest == protect:
-                break
-            self._drop_key(stalest)
+            victim = None
+            for key in self._keys:  # LRU order: stalest first
+                if key != protect and not self._pins.get(key):
+                    victim = key
+                    break
+            if victim is None:
+                break  # everything left is protected or pinned
+            self._drop_key(victim)
             self.evictions += 1
 
 

@@ -115,6 +115,11 @@ class PairReport:
                 f"  exec[{e.ops_executed}/{e.ops_total} ops, "
                 f"{e.ops_reused} reused, {e.tables_served} served]"
             )
+            if e.ops_delta:
+                line += (
+                    f"  delta[{e.ops_delta} ops, "
+                    f"{e.delta_rows_processed} rows]"
+                )
         return line
 
 
@@ -148,6 +153,23 @@ class ChainReport:
     @property
     def total_ops(self) -> int:
         return sum(e.ops_total for e in self.exec_stats_list)
+
+    @property
+    def total_ops_delta(self) -> int:
+        """Operators whose outputs came from delta rules, chain-wide."""
+        return sum(e.ops_delta for e in self.exec_stats_list)
+
+    @property
+    def total_delta_rows_processed(self) -> int:
+        """Delta rows (inserts + deletes) the delta rules touched — the
+        O(|Δ|) work that replaced full re-execution."""
+        return sum(e.delta_rows_processed for e in self.exec_stats_list)
+
+    @property
+    def total_recompute_time_saved(self) -> float:
+        """Recorded original compute cost of every table served instead of
+        recomputed (store-recorded seconds)."""
+        return sum(e.recompute_time_saved for e in self.exec_stats_list)
 
     @property
     def executed_fraction(self) -> float:
@@ -209,6 +231,13 @@ class ChainReport:
                 f"executed ({100.0 * self.executed_fraction:.0f}%), "
                 f"{self.total_ops_reused} reused, "
                 f"{self.total_tables_served} tables served"
+            )
+        if self.total_ops_delta:
+            lines.append(
+                f"delta: {self.total_ops_delta} ops via delta rules, "
+                f"{self.total_delta_rows_processed} delta rows, "
+                f"{self.total_recompute_time_saved * 1e3:.1f} ms "
+                f"recompute saved"
             )
         return "\n".join(lines)
 
@@ -304,6 +333,10 @@ class VersionChainSession:
         # data plane for execute-with-reuse submits; plane-invariant bytes
         # keep store keys / frontier digests / certificates unchanged
         self.plane = config.plane if config is not None else "numpy"
+        # how successor versions execute: full / reuse / delta (mode-invariant
+        # sink bytes; "delta" falls back to the seeded reuse run whenever the
+        # edit is not amenable or a required table left the store)
+        self.exec_mode = config.exec_mode if config is not None else "reuse"
         self.keep_certificates = keep_certificates
         self.pair_cache = pair_cache
         self.store = materialization_store
@@ -371,12 +404,20 @@ class VersionChainSession:
         verdict, stats, certificate, reused = self._decide(prev, version, mapping)
         exec_stats = frontier = results = None
         if plan is not None:
-            frontier, seed_keys = self._frontier_seeds(
-                prev, version, certificate, verdict, prev_plan, plan
-            )
-            res = plan.run(
-                store=self.store, seed_keys=seed_keys, materialize=True
-            )
+            if self.exec_mode == "full":
+                res = plan.run(store=self.store, materialize=True)
+            else:
+                frontier, seed_keys = self._frontier_seeds(
+                    prev, version, certificate, verdict, prev_plan, plan
+                )
+                res = None
+                if self.exec_mode == "delta" and frontier is not None:
+                    res = self._try_delta(frontier, prev, prev_plan, plan)
+                if res is None:
+                    res = plan.run(
+                        store=self.store, seed_keys=seed_keys,
+                        materialize=True,
+                    )
             exec_stats, results = res.stats, res.results
         report = PairReport(
             index=self.version_count - 1,
@@ -432,6 +473,38 @@ class VersionChainSession:
             if key is not None and cur_digests.get(q_op) == key:
                 seed_keys[q_op] = key
         return frontier, seed_keys
+
+    def _try_delta(
+        self,
+        frontier: ReuseFrontier,
+        prev: DataflowDAG,
+        prev_plan: Optional[ExecutionPlan],
+        plan: ExecutionPlan,
+    ):
+        """Delta tier: O(|Δrows|) propagation through the changed cone.
+
+        Engages only on a frontier from ``_frontier_seeds`` — i.e. a True
+        verdict whose certificate replayed green for the pair — and only
+        when the edit is statically amenable (``compute_delta_plan``).
+        Returns ``None`` on any fallback condition (not amenable, a table
+        evicted mid-chain, a byte-identity precondition violated at run
+        time), and the caller takes the seeded reuse run instead — the
+        sink bytes are identical either way, only the cost differs.
+        """
+        if prev_plan is None:
+            return None
+        from repro.core.frontier import compute_delta_plan
+        from repro.engine.delta import DeltaUnsupported, execute_delta
+
+        dplan = compute_delta_plan(frontier, prev, plan.dag)
+        if dplan is None:
+            return None
+        try:
+            return execute_delta(
+                dplan, prev, plan, prev_plan.digests, self.store
+            )
+        except DeltaUnsupported:
+            return None
 
     def _decide(
         self,

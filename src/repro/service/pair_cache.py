@@ -26,6 +26,8 @@ one chain's worth of search work (see benchmarks/service_bench.py).
 
 from __future__ import annotations
 
+import hashlib
+import json
 import threading
 from dataclasses import dataclass
 from typing import Callable, Dict, Optional, Tuple
@@ -35,8 +37,28 @@ from repro.core.dag import DataflowDAG
 from repro.core.edits import EditMapping
 from repro.core.verifier import VeerStats
 
-#: (pair digest, explicitly requested mapping or None for the default)
-PairKey = Tuple[str, Optional[Tuple[Tuple[str, str], ...]]]
+#: (pair digest, raw per-side digests when the canonical digest cannot tell
+#: the sides apart, explicitly requested mapping or None for the default)
+PairKey = Tuple[
+    str, Optional[Tuple[str, str]], Optional[Tuple[Tuple[str, str], ...]]
+]
+
+
+def _raw_dag_digest(dag: DataflowDAG) -> str:
+    """sha256 of the *raw* serialized DAG — the un-canonicalized operator
+    forms a certificate payload stores (``dag_to_dict``), so two versions
+    that differ only by a canonicalized rewrite (e.g. a scaled predicate)
+    get distinct raw digests even though their ``content_digest``s match.
+    Memoized on the DAG instance; deterministic across processes."""
+    d = getattr(dag, "_raw_pair_cache_digest", None)
+    if d is None:
+        from repro.api.serialize import dag_to_dict
+
+        blob = json.dumps(dag_to_dict(dag), sort_keys=True,
+                          separators=(",", ":"))
+        d = hashlib.sha256(blob.encode()).hexdigest()[:32]
+        dag._raw_pair_cache_digest = d
+    return d
 
 
 @dataclass(frozen=True)
@@ -89,9 +111,21 @@ class PairVerdictCache:
         which verdict the verifier reports (a False under mapping m is not
         a False under the default mapping search); ``None`` — the common
         case — keys the verifier's own mapping choice.
+
+        When the two sides share one ``content_digest`` (a revert pair
+        whose edit was a canonicalized rewrite), the pair digest is the
+        same for (P, Q) and (Q, P) — but the cached certificate's payload
+        stores the raw operator forms, so serving the swapped entry would
+        change certificate bytes versus a cache-less run.  Raw per-side
+        digests disambiguate exactly that case; everywhere else they are
+        ``None`` and the hit behavior is unchanged.
         """
+        raw = None
+        if P.content_digest() == Q.content_digest():
+            raw = (_raw_dag_digest(P), _raw_dag_digest(Q))
         return (
             pair_digest(P, Q, semantics),
+            raw,
             mapping.p_to_q if mapping is not None else None,
         )
 

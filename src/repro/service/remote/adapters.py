@@ -119,9 +119,13 @@ def _tier_pair_key(key: PairKey) -> str:
     """Stable string form of a ``PairKey`` for tier storage (tuples become
     JSON lists; deterministic across processes, unlike ``repr`` of nested
     structures is not — and unlike ``hash()``, which is salted)."""
-    digest, mapping = key
+    digest, raw, mapping = key
     return json.dumps(
-        [digest, None if mapping is None else [list(e) for e in mapping]],
+        [
+            digest,
+            None if raw is None else list(raw),
+            None if mapping is None else [list(e) for e in mapping],
+        ],
         separators=(",", ":"),
     )
 

@@ -17,7 +17,7 @@ import json
 from dataclasses import dataclass
 from typing import Any, Dict, Tuple
 
-# the five edit families the session generator samples from (ISSUE 6):
+# the edit families the session generator samples from (ISSUE 6 + 10):
 #   equivalent   — Calcite-preserving rewrites (benchmarks/workloads.py)
 #   semantic     — TPC-DS-iterative semantic edits (ground truth unknown:
 #                  a dropped projection column may be provably unused)
@@ -30,20 +30,26 @@ from typing import Any, Dict, Tuple
 #                  identical operator ids: the replayed pair is
 #                  content-identical to the first and must re-hit the
 #                  VerdictCache / PairVerdictCache
+#   predicate    — narrow (p ∧ x) or widen (p ∨ x) one FILTER's predicate
+#                  in place: the canonical delta-amenable edit
+#                  (repro.core.delta); ground truth open, so the pair runs
+#                  the same byte-identity oracle as the other families
 EDIT_FAMILIES = (
     "equivalent",
     "semantic",
     "boundary",
     "rename_storm",
     "churn_revert",
+    "predicate",
 )
 
 DEFAULT_EDIT_MIX: Tuple[Tuple[str, float], ...] = (
-    ("equivalent", 0.40),
+    ("equivalent", 0.30),
     ("semantic", 0.15),
     ("boundary", 0.15),
-    ("rename_storm", 0.15),
+    ("rename_storm", 0.10),
     ("churn_revert", 0.15),
+    ("predicate", 0.15),
 )
 
 DEFAULT_WORKLOADS = ("W1", "W2", "W3", "W4", "W5", "W6", "W7", "W8")
@@ -93,6 +99,11 @@ class WorkloadConfig:
     # docs/SEARCH_GUIDANCE.md); scheduling-only, so oracle expectations are
     # unchanged
     guidance: str = "none"
+    # execute-with-reuse mode of the replayed sessions (when the driver
+    # runs the exec-identity oracle): "full" / "reuse" / "delta" — see
+    # VeerConfig.exec_mode; sink bytes are mode-invariant, so the oracle's
+    # expectations do not change with the mode
+    exec_mode: str = "reuse"
 
     # -- convenience ---------------------------------------------------------
     def replace(self, **changes: Any) -> "WorkloadConfig":
@@ -134,6 +145,11 @@ class WorkloadConfig:
         if self.guidance not in ("none", "model"):
             raise WorkloadConfigError(
                 f"guidance must be 'none' or 'model', got {self.guidance!r}"
+            )
+        if self.exec_mode not in ("full", "reuse", "delta"):
+            raise WorkloadConfigError(
+                f"exec_mode must be 'full', 'reuse' or 'delta', "
+                f"got {self.exec_mode!r}"
             )
         if not self.workloads:
             raise WorkloadConfigError("config selects no workloads")

@@ -151,6 +151,45 @@ def _rename_storm(
     return q, mapping
 
 
+def _predicate_edit(
+    dag: DataflowDAG, rng: random.Random
+) -> Optional[DataflowDAG]:
+    """Narrow (p ∧ x) or widen (p ∨ x) one FILTER's predicate in place.
+
+    The canonical delta-amenable edit family (ISSUE 10): the operator id is
+    kept, so the id-stable identity mapping aligns the pair and the delta
+    analysis (``repro.core.delta``) classifies the boundary as
+    narrow / widen / filter-general.  ``p ∧ x ⇒ p`` and ``p ⇒ p ∨ x`` hold
+    for *any* conjunct/disjunct, so a narrow step is provably
+    delete-only and a widen step insert-only whenever the EV solver
+    supports the predicate's atoms.  Returns ``None`` when the shape has
+    no filter over at least one column.
+    """
+    from repro.core.predicates import Pred
+
+    candidates = [
+        o for o in sorted(dag.ops.values(), key=lambda o: o.id)
+        if o.op_type == D.FILTER
+        and o.get("pred") is not None
+        and o.get("pred").columns
+    ]
+    if not candidates:
+        return None
+    op = rng.choice(candidates)
+    pred = op.get("pred")
+    col = rng.choice(sorted(pred.columns))
+    cmp_op = rng.choice(["<=", "<", ">=", ">"])
+    bound = rng.choice([-2, -1, 0, 1, 2, 3, 5]) + rng.choice([0.0, 0.5])
+    atom = Pred.cmp(col, cmp_op, bound)
+    if rng.random() < 0.5:
+        new_pred = Pred.and_(pred, atom)     # narrow: delete-only delta
+    else:
+        new_pred = Pred.or_(pred, atom)      # widen: insert-only delta
+    q = dag.replace_op(op.with_props(pred=new_pred))
+    q.validate()
+    return q
+
+
 class SessionGenerator:
     """Samples deterministic multi-version edit sessions from a config.
 
@@ -239,6 +278,13 @@ class SessionGenerator:
         elif family == "rename_storm":
             q, mapping = _rename_storm(cur, rng, prefix)
             push(q, "rename_storm", EXPECTED_EQ, mapping)
+        elif family == "predicate":
+            q = _predicate_edit(cur, rng)
+            if q is None:
+                # shape has no filter with a linear predicate left: degrade
+                # to a semantic edit so the chain keeps its planned length
+                q = apply_inequivalent_edits(cur, 1, rng=rng, prefix=prefix)
+            push(q, "predicate", EXPECTED_ANY)
         elif family == "churn_revert":
             # A → B → A → B with one frozen RNG for both B constructions:
             # the second A→B pair is content-identical to the first and must

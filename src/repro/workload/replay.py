@@ -111,6 +111,12 @@ class ReplayResult:
     certified: int = 0
     reused: int = 0
     ev_calls: int = 0
+    # delta-execution accounting (exec_mode="delta"): summed over every
+    # pair's ExecStats — ops answered by delta rules, delta rows they
+    # touched, and the recorded recompute cost the served tables avoided
+    ops_delta: int = 0
+    delta_rows: int = 0
+    recompute_saved_s: float = 0.0
     violations: List[OracleViolation] = field(default_factory=list)
     latencies: List[float] = field(default_factory=list)  # per-pair seconds
     busy_rejections: int = 0
@@ -165,6 +171,12 @@ class ReplayResult:
             f"({self.oracle_wall:.2f}s)"
             + (f"; windows harvested: {len(self.windows)}" if self.windows else ""),
         ]
+        if self.ops_delta:
+            lines.insert(2, (
+                f"delta: {self.ops_delta} ops via delta rules, "
+                f"{self.delta_rows} delta rows, "
+                f"{self.recompute_saved_s * 1e3:.1f} ms recompute saved"
+            ))
         lines.extend(f"  VIOLATION {viol}" for viol in self.violations[:20])
         lines.extend(f"  ERROR {e}" for e in self.errors[:20])
         return "\n".join(lines)
@@ -176,6 +188,7 @@ def default_veer_config(config: WorkloadConfig) -> VeerConfig:
         max_decompositions=config.max_decompositions,
         plane=config.plane,
         guidance=config.guidance,
+        exec_mode=config.exec_mode,
     )
 
 
@@ -341,6 +354,11 @@ def _check_session(
         result.certified += int(report.certified)
         result.reused += int(report.reused)
         result.ev_calls += report.stats.ev_calls
+        es = report.exec_stats
+        if es is not None:
+            result.ops_delta += es.ops_delta
+            result.delta_rows += es.delta_rows_processed
+            result.recompute_saved_s += es.recompute_time_saved
         P, Q = session.versions[k - 1], session.versions[k]
 
         if collect_windows and report.certificate is not None:

@@ -1,0 +1,601 @@
+"""Delta-cone execution (ISSUE 10): analysis, per-op delta rules, gating.
+
+Layered like the engine itself:
+
+  * ``repro.core.delta`` — amenability classification and the static
+    ``DeltaPlan`` (boundary class, changed spine, exact region);
+  * ``repro.engine.delta`` — the delta rules, checked *differentially*:
+    every delta-path sink must be ``tables_identical`` (dtype-strict,
+    byte-for-byte) to an independent full execution of Q, on every table
+    semantics and on every available data plane;
+  * ``repro.service.chain`` — the certificate gate: ``exec_mode="delta"``
+    engages only on a True verdict whose certificate replayed green, and
+    falls back to the PR 5 seeded-reuse path on anything non-amenable;
+  * ``repro.engine.store`` — pin/unpin refcounts keeping byte-budget LRU
+    eviction from freeing a table an in-flight delta run is about to read.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.api import VeerConfig
+from repro.api.config import ConfigError
+from repro.core import dag as D
+from repro.core.dag import DataflowDAG, Link, Operator
+from repro.core.delta import (
+    AGG_SWAP,
+    FILTER_GENERAL,
+    NARROW,
+    PROJECT_COLS,
+    WIDEN,
+    analyze_delta,
+    classify_edit,
+    delta_census,
+)
+from repro.core.predicates import LinExpr, Pred
+from repro.engine import (
+    InMemoryMaterializationStore,
+    Table,
+    execute,
+    tables_identical,
+)
+from repro.engine.delta import DeltaUnsupported, execute_delta
+from repro.engine.executor import ExecutionPlan
+from repro.engine.plane import available_planes
+from repro.service import VersionChainSession
+
+ALL_SEMANTICS = [D.SET, D.BAG, D.ORDERED]
+
+
+# ---------------------------------------------------------------------------
+# builders
+# ---------------------------------------------------------------------------
+def src_table(n=3000, seed=7):
+    rng = np.random.default_rng(seed)
+    return Table(
+        {
+            "a": rng.integers(0, 10, n).astype(np.float64),
+            "b": rng.uniform(0, 100, n),
+            "c": rng.integers(-5, 5, n).astype(np.float64),
+        },
+        ["a", "b", "c"],
+    )
+
+
+def seq(op):
+    """(op, link-maker) — append ``op`` linearly after the previous one."""
+    return op, (lambda prev: [Link(prev, op.id)])
+
+
+def build(pred_b, *, extra=(), sem=D.BAG):
+    """src → fe(pred_b) → fa(a>2) → ``extra`` ops → sink."""
+    ops = [
+        Operator.make("src", D.SOURCE, schema=("a", "b", "c")),
+        Operator.make("fe", D.FILTER, pred=pred_b),
+        Operator.make("fa", D.FILTER, pred=Pred.cmp("a", ">", 2)),
+    ]
+    links = [Link("src", "fe"), Link("fe", "fa")]
+    prev = "fa"
+    for op, mk in extra:
+        ops.append(op)
+        links.extend(mk(prev))
+        prev = op.id
+    ops.append(Operator.make("sink", D.SINK, semantics=sem))
+    links.append(Link(prev, "sink"))
+    dag = DataflowDAG(ops, links)
+    dag.validate()
+    return dag
+
+
+def heavy_tail():
+    """classifier + aggregate — the spine the delta rules must traverse."""
+    return [
+        seq(Operator.make("fb", D.FILTER, pred=Pred.cmp("b", "<", 50))),
+        seq(Operator.make("cl", D.CLASSIFIER, col="a", out="label",
+                          model="m", classes=5)),
+        seq(Operator.make("agg", D.AGGREGATE, group_by=("label",),
+                          aggs=(("sum", "a", "sa"), ("count", "*", "n")))),
+    ]
+
+
+P95 = Pred.cmp("b", "<", 95)
+P85 = Pred.cmp("b", "<", 85)
+
+
+def run_delta(P, Q, sources, *, plane="numpy", store=None):
+    """Materialize P, delta-execute Q; returns (ExecResult, full results).
+
+    The oracle side always executes on the reference plane, so a non-numpy
+    ``plane`` turns the assertion into a cross-plane byte-identity check.
+    """
+    store = store if store is not None else InMemoryMaterializationStore()
+    p_plan = ExecutionPlan(P, sources, plane=plane)
+    p_plan.run(store=store, materialize=True)
+    dplan = analyze_delta(P, Q)
+    assert dplan is not None, "edit unexpectedly not delta-amenable"
+    res = execute_delta(
+        dplan, P, ExecutionPlan(Q, sources, plane=plane), p_plan.digests, store
+    )
+    full = execute(Q, sources)
+    return res, full
+
+
+def assert_delta_identical(P, Q, sources, *, plane="numpy"):
+    res, full = run_delta(P, Q, sources, plane=plane)
+    for s, t in full.items():
+        assert tables_identical(res.results[s], t), f"sink {s} diverged"
+    st = res.stats
+    assert st.ops_delta > 0
+    assert (st.ops_executed + st.ops_reused + st.ops_skipped + st.ops_delta
+            == st.ops_total)
+    return st
+
+
+# ---------------------------------------------------------------------------
+# core/delta.py: classification + census
+# ---------------------------------------------------------------------------
+def test_classify_edit_filter_classes():
+    f = lambda p: Operator.make("f", D.FILTER, pred=p)
+    assert classify_edit(f(P95), f(P85)) == NARROW
+    assert classify_edit(f(P85), f(P95)) == WIDEN
+    assert classify_edit(f(P95), f(Pred.cmp("c", ">=", 0))) == FILTER_GENERAL
+    # conjunction with the old predicate narrows for *any* conjunct
+    assert classify_edit(
+        f(P95), f(Pred.and_(P95, Pred.cmp("a", "<", 5)))
+    ) == NARROW
+
+
+def test_classify_edit_project_and_aggregate():
+    pr1 = Operator.make("p", D.PROJECT, cols=(("a", "a"),))
+    pr2 = Operator.make("p", D.PROJECT, cols=(("a", "a"), ("b", "b")))
+    assert classify_edit(pr1, pr2) == PROJECT_COLS
+    ag1 = Operator.make("g", D.AGGREGATE, group_by=("a",),
+                        aggs=(("sum", "b", "sb"),))
+    ag2 = Operator.make("g", D.AGGREGATE, group_by=("a",),
+                        aggs=(("sum", "b", "sb"), ("avg", "c", "ac")))
+    assert classify_edit(ag1, ag2) == AGG_SWAP
+    # a changed group_by is a different partition — never amenable
+    ag3 = Operator.make("g", D.AGGREGATE, group_by=("c",),
+                        aggs=(("sum", "b", "sb"),))
+    assert classify_edit(ag1, ag3) is None
+    # so is a changed operator type
+    assert classify_edit(pr1, ag1) is None
+
+
+def test_delta_census_fallback_labels():
+    t = src_table(400)
+    P = build(P95, extra=[seq(Operator.make(
+        "cl", D.CLASSIFIER, col="a", out="label", model="m", classes=5))])
+    # changed ML op: structurally aligned but not an amenable boundary
+    Q = build(P95, extra=[seq(Operator.make(
+        "cl", D.CLASSIFIER, col="c", out="label", model="m2", classes=4))])
+    plan, label = delta_census(P, Q)
+    assert plan is None and label == "fallback:not-amenable:Classifier"
+    # identical pair: nothing to delta
+    plan, label = delta_census(P, P)
+    assert plan is None and label == "fallback:no-change"
+    # two changed operators: multi-site edits fall back
+    Q2 = build(Pred.cmp("b", "<", 80), extra=[seq(Operator.make(
+        "cl", D.CLASSIFIER, col="a", out="label", model="m", classes=7))])
+    plan, label = delta_census(P, Q2)
+    assert plan is None and label.startswith("fallback:")
+    del t
+
+
+# ---------------------------------------------------------------------------
+# engine/delta.py: boundary rules, differential on every semantics
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("sem", ALL_SEMANTICS)
+def test_narrow_boundary_byte_identical(sem):
+    t = src_table()
+    P = build(P95, extra=heavy_tail(), sem=sem)
+    Q = build(P85, extra=heavy_tail(), sem=sem)
+    st = assert_delta_identical(P, Q, {"src": t})
+    assert st.delta_rows_processed > 0
+
+
+@pytest.mark.parametrize("sem", ALL_SEMANTICS)
+def test_widen_boundary_byte_identical(sem):
+    t = src_table()
+    P = build(P85, extra=heavy_tail(), sem=sem)
+    Q = build(P95, extra=heavy_tail(), sem=sem)
+    assert_delta_identical(P, Q, {"src": t})
+
+
+@pytest.mark.parametrize("sem", ALL_SEMANTICS)
+def test_filter_general_boundary_byte_identical(sem):
+    t = src_table()
+    P = build(P95, extra=heavy_tail(), sem=sem)
+    Q = build(Pred.cmp("c", ">=", 0), extra=heavy_tail(), sem=sem)
+    assert_delta_identical(P, Q, {"src": t})
+
+
+def test_project_cols_boundary():
+    t = src_table()
+    tail = [
+        seq(Operator.make("f2", D.FILTER, pred=Pred.cmp("a", "<", 8))),
+        seq(Operator.make("ag2", D.AGGREGATE, group_by=("a",),
+                          aggs=(("sum", "b", "sb"),))),
+    ]
+    pr_p = Operator.make("pr", D.PROJECT, cols=(
+        ("a", "a"), ("b", "b"),
+        ("d", LinExpr((("a", 2.0), ("c", 1.0)), 1.0)),
+    ))
+    pr_q = Operator.make("pr", D.PROJECT, cols=(
+        ("a", "a"), ("b", "b"),
+        ("d", LinExpr((("a", 2.0),), 5.0)), ("e", "c"),
+    ))
+    P = build(P95, extra=[seq(pr_p)] + tail)
+    Q = build(P95, extra=[seq(pr_q)] + tail)
+    assert_delta_identical(P, Q, {"src": t})
+
+
+def test_agg_swap_boundary():
+    t = src_table()
+    cl = Operator.make("cl", D.CLASSIFIER, col="a", out="label",
+                       model="m", classes=5)
+    ag_p = Operator.make("agg", D.AGGREGATE, group_by=("label",),
+                         aggs=(("sum", "a", "sa"), ("count", "*", "n")))
+    ag_q = Operator.make("agg", D.AGGREGATE, group_by=("label",),
+                         aggs=(("sum", "a", "sa"), ("avg", "b", "ab"),
+                               ("count", "*", "n")))
+    P = build(P95, extra=[seq(cl), seq(ag_p)])
+    Q = build(P95, extra=[seq(cl), seq(ag_q)])
+    st = assert_delta_identical(P, Q, {"src": t})
+    # the swapped aggregate re-reduces its exact input, no full re-exec
+    assert st.ops_executed == 0
+
+
+def test_narrow_through_distinct():
+    t = src_table()
+    tail = [
+        seq(Operator.make("rp", D.PROJECT, cols=(("a", "a"), ("c", "c")))),
+        seq(Operator.make("dd", D.DISTINCT)),
+    ]
+    P = build(P95, extra=tail)
+    Q = build(P85, extra=tail)
+    assert_delta_identical(P, Q, {"src": t})
+    assert_delta_identical(Q, P, {"src": t})  # widen direction
+
+
+def test_narrow_through_sort_dense_escape():
+    t = src_table()
+    tail = [seq(Operator.make("so", D.SORT, keys=(("a", True),)))]
+    P = build(P95, extra=tail)
+    Q = build(P85, extra=tail)
+    res, full = run_delta(P, Q, {"src": t})
+    for s, tbl in full.items():
+        assert tables_identical(res.results[s], tbl)
+    # SORT has no sparse rule: the spine densifies and executes it
+    assert res.stats.ops_executed >= 1
+
+
+@pytest.mark.parametrize("direction", ["narrow", "widen"])
+def test_delta_through_join_probe(direction):
+    rng = np.random.default_rng(3)
+    t = src_table()
+    dim = Table(
+        {"k": np.arange(12).astype(np.float64),
+         "w": rng.uniform(0, 1, 12)},
+        ["k", "w"],
+    )
+
+    def build_join(pred_b):
+        ops = [
+            Operator.make("src", D.SOURCE, schema=("a", "b", "c")),
+            Operator.make("dim", D.SOURCE, schema=("k", "w")),
+            Operator.make("fe", D.FILTER, pred=pred_b),
+            Operator.make("j", D.JOIN, on=(("a", "k"),), how="inner"),
+            Operator.make("sink", D.SINK, semantics=D.BAG),
+        ]
+        links = [Link("src", "fe"), Link("fe", "j", 0), Link("dim", "j", 1),
+                 Link("j", "sink")]
+        dag = DataflowDAG(ops, links)
+        dag.validate()
+        return dag
+
+    P, Q = build_join(P95), build_join(P85)
+    if direction == "widen":
+        P, Q = Q, P
+    assert_delta_identical(P, Q, {"src": t, "dim": dim})
+
+
+@pytest.mark.parametrize(
+    "plane",
+    [p for p in ("numpy", "jax") if p in available_planes()],
+)
+def test_delta_cross_plane_byte_identical(plane):
+    t = src_table()
+    P = build(P95, extra=heavy_tail())
+    Q = build(P85, extra=heavy_tail())
+    assert_delta_identical(P, Q, {"src": t}, plane=plane)
+
+
+def test_missing_p_table_raises_delta_unsupported():
+    t = src_table(500)
+    P = build(P95, extra=heavy_tail())
+    Q = build(P85, extra=heavy_tail())
+    p_plan = ExecutionPlan(P, {"src": t})
+    p_plan.run()  # no store, nothing materialized
+    dplan = analyze_delta(P, Q)
+    with pytest.raises(DeltaUnsupported):
+        execute_delta(dplan, P, ExecutionPlan(Q, {"src": t}),
+                      p_plan.digests, InMemoryMaterializationStore())
+
+
+# ---------------------------------------------------------------------------
+# seeded randomized differential — amenable edits × semantics (always runs)
+# ---------------------------------------------------------------------------
+def _random_amenable_edit(rng):
+    """(P, Q, expected-class) over the heavy spine; Q need not be
+    equivalent to P — the delta algebra must be exact regardless."""
+    kind = rng.choice(["narrow", "widen", "general", "project", "agg"])
+    sem = ALL_SEMANTICS[int(rng.integers(0, 3))]
+    lo, hi = sorted(rng.uniform(20, 95, 2))
+    if kind in ("narrow", "widen", "general"):
+        tail = heavy_tail()
+        if kind == "narrow":
+            P = build(Pred.cmp("b", "<", float(hi)), extra=tail, sem=sem)
+            Q = build(Pred.cmp("b", "<", float(lo)), extra=tail, sem=sem)
+        elif kind == "widen":
+            P = build(Pred.cmp("b", "<", float(lo)), extra=tail, sem=sem)
+            Q = build(Pred.cmp("b", "<", float(hi)), extra=tail, sem=sem)
+        else:
+            P = build(Pred.cmp("b", "<", float(hi)), extra=tail, sem=sem)
+            Q = build(Pred.cmp("c", ">=", float(rng.integers(-3, 3))),
+                      extra=tail, sem=sem)
+    elif kind == "project":
+        mk = lambda cols: [
+            seq(Operator.make("pr", D.PROJECT, cols=cols)),
+            seq(Operator.make("f2", D.FILTER,
+                              pred=Pred.cmp("a", "<", float(hi) / 10))),
+        ]
+        P = build(P95, extra=mk((("a", "a"), ("b", "b"))), sem=sem)
+        Q = build(P95, extra=mk((
+            ("a", "a"), ("b", "b"),
+            ("d", LinExpr((("a", float(rng.integers(1, 4))),),
+                          float(rng.integers(0, 5)))),
+        )), sem=sem)
+    else:
+        cl = Operator.make("cl", D.CLASSIFIER, col="a", out="label",
+                           model="m", classes=5)
+        mk = lambda aggs: [seq(cl), seq(Operator.make(
+            "agg", D.AGGREGATE, group_by=("label",), aggs=aggs))]
+        P = build(P95, extra=mk((("sum", "a", "sa"),)), sem=sem)
+        Q = build(P95, extra=mk(
+            (("sum", "a", "sa"), ("min", "b", "mb"), ("count", "*", "n"))
+        ), sem=sem)
+    return P, Q
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3, 4, 5])
+def test_seeded_randomized_delta_differential(seed):
+    rng = np.random.default_rng(seed)
+    t = src_table(n=int(rng.integers(500, 2500)), seed=seed + 50)
+    P, Q = _random_amenable_edit(rng)
+    assert_delta_identical(P, Q, {"src": t})
+
+
+# optional-dependency variant: broader sampling when hypothesis is present
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on minimal installs
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+
+    @given(
+        seed=st.integers(min_value=0, max_value=10_000),
+        n=st.integers(min_value=200, max_value=2000),
+    )
+    @settings(
+        max_examples=10,
+        deadline=None,
+        suppress_health_check=[HealthCheck.too_slow],
+    )
+    def test_property_delta_byte_identical(seed, n):
+        rng = np.random.default_rng(seed)
+        t = src_table(n=n, seed=seed + 1)
+        P, Q = _random_amenable_edit(rng)
+        assert_delta_identical(P, Q, {"src": t})
+
+else:
+
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_property_delta_byte_identical():
+        pass
+
+
+# ---------------------------------------------------------------------------
+# store pinning: byte-budget eviction under a running delta plan
+# ---------------------------------------------------------------------------
+class _UnpinnableStore(InMemoryMaterializationStore):
+    """The pre-pin store behavior: pin() protects nothing."""
+
+    def pin(self, keys):
+        return ()
+
+
+def _pin_scenario(store):
+    """P materialized into ``store``; Q's delta run writes enough new
+    tables to blow the byte budget mid-run, so un-pinned P entries get
+    LRU-evicted *between* the boundary read and the later spine reads."""
+    t = src_table(n=4000, seed=11)
+    P = build(P95, extra=heavy_tail())
+    Q = build(P85, extra=heavy_tail())
+    p_plan = ExecutionPlan(P, {"src": t})
+    p_plan.run(store=store, materialize=True)
+    # budget: just the P materializations — any fresh Q payload overflows
+    store.byte_budget = store.total_bytes()
+    dplan = analyze_delta(P, Q)
+    res = execute_delta(
+        dplan, P, ExecutionPlan(Q, {"src": t}), p_plan.digests, store
+    )
+    return res, execute(Q, {"src": t})
+
+
+def test_pinned_delta_run_survives_eviction_pressure():
+    store = InMemoryMaterializationStore()
+    res, full = _pin_scenario(store)
+    for s, tbl in full.items():
+        assert tables_identical(res.results[s], tbl)
+    # pressure was real (the budget forced evictions of unpinned entries —
+    # or at least an over-budget store), yet no pinned read was lost
+    assert store.stats()["pinned_keys"] == 0  # all pins released
+
+
+def test_unpinned_delta_run_loses_tables_mid_run():
+    """Regression: without pin/unpin the same scenario evicts a P table
+    the delta run still needs and the run degrades to DeltaUnsupported."""
+    with pytest.raises(DeltaUnsupported):
+        _pin_scenario(_UnpinnableStore())
+
+
+def test_store_pin_refcounts():
+    store = InMemoryMaterializationStore()
+    a = Table({"x": np.arange(100, dtype=np.float64)}, ["x"])
+    b = Table({"x": np.arange(100, 200, dtype=np.float64)}, ["x"])
+    store.put("a", a)
+    store.put("b", b)
+    pinned = store.pin(["a", "ghost"])
+    assert pinned == ("a",)          # only present keys pin
+    from repro.engine.store import table_nbytes
+
+    store.byte_budget = table_nbytes(a) + 10
+    c = Table({"x": np.arange(300, 400, dtype=np.float64)}, ["x"])
+    store.put("c", c)
+    # 'a' is stalest but pinned: 'b' is evicted instead
+    assert "a" in store and "b" not in store
+    store.unpin(pinned)
+    store.put("d", Table({"x": np.arange(7, dtype=np.float64)}, ["x"]))
+    assert "a" not in store          # unpinned ⇒ evictable again
+
+
+# ---------------------------------------------------------------------------
+# service gate: exec_mode plumbing + certificate-gated engagement
+# ---------------------------------------------------------------------------
+def _equivalent_chain(thresholds=(80.0, 74.0, 77.0)):
+    """Dominated-filter chain: every pair is equivalent (fb ⇒ the edited
+    fe for all thresholds > 50), so the verifier certifies EQ and the
+    certificate grounds the delta tier."""
+    return [build(Pred.cmp("b", "<", th), extra=heavy_tail())
+            for th in thresholds]
+
+
+def test_exec_mode_validation():
+    with pytest.raises(ConfigError):
+        VeerConfig(exec_mode="partial").validate()
+    from repro.workload.config import WorkloadConfig, WorkloadConfigError
+
+    with pytest.raises(WorkloadConfigError):
+        WorkloadConfig(exec_mode="partial").validate()
+    VeerConfig(exec_mode="delta").validate()
+    WorkloadConfig(exec_mode="delta").validate()
+
+
+def test_session_delta_mode_byte_identical_to_full():
+    sources = {"src": src_table(n=5000, seed=2)}
+    chain = _equivalent_chain()
+    config = VeerConfig(evs=("equitas", "spes", "udp"))
+
+    full_sinks = [execute(v, sources) for v in chain]
+    session = VersionChainSession(
+        config=config.replace(exec_mode="delta"),
+        materialization_store=InMemoryMaterializationStore(),
+    )
+    reports = [session.submit(v, sources=sources) for v in chain]
+
+    for k, (r, full) in enumerate(zip(reports, full_sinks)):
+        for s, tbl in full.items():
+            assert tables_identical(r.results[s], tbl), f"v{k} sink {s}"
+        if k > 0:
+            assert r.verdict is True and r.certified
+            assert r.exec_stats.ops_delta > 0
+            assert r.exec_stats.delta_rows_processed > 0
+    chain_report = session.report()
+    assert chain_report.total_ops_delta > 0
+    assert "delta:" in chain_report.summary()
+
+
+def test_session_delta_mode_falls_back_on_non_amenable():
+    """A rename-only pair is EQ + certified but has no changed boundary:
+    delta analysis returns None and the seeded reuse path serves it —
+    zero violations, still byte-identical."""
+    sources = {"src": src_table(n=2000, seed=4)}
+    P = build(P95, extra=heavy_tail())
+    # rename an interior op: equivalent, but the mapping is non-identity
+    from repro.core.edits import EditMapping
+
+    renames = {o.id: (o.id + "x" if o.id == "fa" else o.id)
+               for o in P.ops.values()}
+    Q = DataflowDAG(
+        [Operator.make(renames[o.id], o.op_type, **o.props)
+         for o in P.ops.values()],
+        [Link(renames[l.src], renames[l.dst], l.dst_port) for l in P.links],
+    )
+    Q.validate()
+    mapping = EditMapping.make(renames)
+
+    session = VersionChainSession(
+        config=VeerConfig(evs=("equitas", "spes", "udp"), exec_mode="delta"),
+        materialization_store=InMemoryMaterializationStore(),
+    )
+    session.submit(P, sources=sources)
+    r = session.submit(Q, mapping, sources=sources)
+    assert r.verdict is True
+    full = execute(Q, sources)
+    for s, tbl in full.items():
+        assert tables_identical(r.results[s], tbl)
+    assert r.exec_stats.ops_delta == 0       # fell back to seeded reuse
+    assert r.exec_stats.ops_reused > 0
+
+
+def test_session_full_mode_matches_delta_mode():
+    sources = {"src": src_table(n=3000, seed=9)}
+    chain = _equivalent_chain()
+    config = VeerConfig(evs=("equitas", "spes", "udp"))
+    results = {}
+    for mode in ("full", "delta"):
+        session = VersionChainSession(
+            config=config.replace(exec_mode=mode),
+            materialization_store=InMemoryMaterializationStore(),
+        )
+        results[mode] = [session.submit(v, sources=sources) for v in chain]
+    for rf, rd in zip(results["full"], results["delta"]):
+        for s in rf.results:
+            assert tables_identical(rf.results[s], rd.results[s])
+    # full mode never reuses or deltas; delta mode never fully re-executes
+    assert all(r.exec_stats.ops_delta == 0 for r in results["full"])
+    assert all(r.exec_stats.ops_delta > 0 for r in results["delta"][1:])
+
+
+# ---------------------------------------------------------------------------
+# workload: the predicate edit family is deterministic and delta-eligible
+# ---------------------------------------------------------------------------
+def test_predicate_family_deterministic_and_eligible():
+    from repro.workload import SessionGenerator, WorkloadConfig
+
+    config = WorkloadConfig(
+        seed=5, sessions=2, chain_length=6,
+        edit_mix=(("predicate", 1.0),), rows=40,
+    )
+    a = [s.signature() for s in SessionGenerator(config).generate()]
+    b = [s.signature() for s in SessionGenerator(config).generate()]
+    assert a == b                     # same seed ⇒ byte-identical sessions
+
+    sessions = SessionGenerator(config).generate()
+    labels = []
+    for s in sessions:
+        for k, p in enumerate(s.pairs):
+            assert p.kind in ("predicate", "semantic")
+            _, label = delta_census(
+                s.versions[k], s.versions[k + 1], p.mapping
+            )
+            labels.append(label)
+    # the family exists to feed the delta tier: amenable pairs must occur
+    assert any(not l.startswith("fallback:") for l in labels)
